@@ -1,0 +1,69 @@
+"""§Perf hillclimb driver: compile a cell variant and report roofline terms.
+
+    PYTHONPATH=src python -m benchmarks.perf_iter --arch tinyllama-1.1b \
+        --shape train_4k --microbatches 2 [--no-remat] [--tag hypothesis-3]
+
+Appends records to results/perf_iters.json so the iteration log survives.
+(Must run in a fresh process: the 512-device forcing happens at import.)
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--strategy", default="2d", choices=["2d", "fsdp", "dp"])
+    ap.add_argument("--router-group", type=int, default=None)
+    ap.add_argument("--capacity-factor", type=float, default=None)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="results/perf_iters.json")
+    args = ap.parse_args()
+
+    from repro.analysis.roofline import analyze_cell
+
+    overrides = {}
+    if args.router_group is not None:
+        overrides["router_group"] = args.router_group
+    if args.capacity_factor is not None:
+        overrides["capacity_factor"] = args.capacity_factor
+
+    t0 = time.perf_counter()
+    rec = analyze_cell(
+        args.arch,
+        args.shape,
+        microbatches=args.microbatches,
+        remat=not args.no_remat,
+        cfg_overrides=overrides or None,
+        strategy=args.strategy,
+    )
+    rec["tag"] = args.tag
+    rec["remat"] = not args.no_remat
+    rec["strategy"] = args.strategy
+    rec["overrides"] = overrides
+    rec["wall_s"] = round(time.perf_counter() - t0, 1)
+
+    print(json.dumps({k: rec[k] for k in (
+        "arch", "shape", "tag", "num_microbatches", "remat", "strategy",
+        "t_compute_s", "t_memory_s", "t_collective_s", "bottleneck",
+        "useful_compute_ratio", "roofline_fraction_compute", "useful_fraction",
+    )}, indent=1))
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    hist = []
+    if os.path.exists(args.out):
+        hist = json.load(open(args.out))
+    hist.append(rec)
+    json.dump(hist, open(args.out, "w"), indent=1)
+
+
+if __name__ == "__main__":
+    main()

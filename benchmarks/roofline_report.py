@@ -1,0 +1,65 @@
+"""Render §Dry-run / §Roofline tables from results/*.json into markdown."""
+from __future__ import annotations
+
+import json
+import os
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def dryrun_table(path="results/dryrun.json") -> str:
+    if not os.path.exists(path):
+        return "(dry-run results missing — run repro.launch.dryrun)"
+    rows = json.load(open(path))
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    out = [
+        "| arch | shape | mesh | ok | compile s | GiB/dev | fits 16G | collective GiB (once-counted) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        coll = r.get("collectives", {}).get("total_bytes", 0)
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {'Y' if r.get('ok') else 'FAIL'} "
+            f"| {r.get('compile_s','-')} | {fmt_bytes(r.get('bytes_per_device',0))} "
+            f"| {'Y' if r.get('fits_16g_hbm') else 'tight'} | {fmt_bytes(coll)} |"
+        )
+    n_ok = sum(1 for r in rows if r.get("ok"))
+    out.append(f"\n{n_ok}/{len(rows)} cells compile.")
+    return "\n".join(out)
+
+
+def roofline_table(path="results/roofline.json") -> str:
+    if not os.path.exists(path):
+        return "(roofline results missing — run repro.analysis.roofline)"
+    rows = json.load(open(path))
+    rows = [r for r in rows if "bottleneck" in r]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    out = [
+        "| arch | shape | t_compute s | t_memory s | t_collective s | bound | "
+        "model TFLOPs | useful ratio | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.4f} | {r['t_memory_s']:.4f} "
+            f"| {r['t_collective_s']:.4f} | **{r['bottleneck']}** "
+            f"| {r['model_flops']/1e12:.1f} | {r['useful_compute_ratio']:.2f} "
+            f"| {r['roofline_fraction_compute']:.2f} |"
+        )
+    return "\n".join(out)
+
+
+def run(quick: bool = True):
+    dr = dryrun_table()
+    rf = roofline_table()
+    n = dr.count("| Y |")
+    return [("dryrun_cells_ok", float(n), "see results/dryrun.json")]
+
+
+if __name__ == "__main__":
+    print("## Dry-run\n")
+    print(dryrun_table())
+    print("\n## Roofline\n")
+    print(roofline_table())

@@ -1,0 +1,50 @@
+"""Benchmark harness — one module per paper table/figure (deliverable (d)).
+
+  python -m benchmarks.run [--full] [--only speed,ppo,satisfaction,shift,roofline]
+
+Prints ``name,us_per_call,derived`` CSV rows (assignment format).  --full uses
+paper-scale training budgets; the default quick mode validates the same
+claims with reduced budgets suited to this single-CPU container.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MODULES = {
+    "speed": ("benchmarks.speed_table", "Table 2 / Fig 1: env + PPO throughput"),
+    "ppo": ("benchmarks.ppo_shopping", "Fig 4a: PPO vs max-charge baseline"),
+    "satisfaction": ("benchmarks.satisfaction_sweep", "Fig 4b/c: alpha sweep"),
+    "shift": ("benchmarks.price_shift", "Fig 5: price-year distribution shift"),
+    "roofline": ("benchmarks.roofline_report", "dry-run + roofline tables"),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    names = list(MODULES) if args.only is None else args.only.split(",")
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        mod_name, desc = MODULES[name]
+        print(f"# --- {name}: {desc}", flush=True)
+        t0 = time.perf_counter()
+        try:
+            mod = __import__(mod_name, fromlist=["run"])
+            rows = mod.run(quick=not args.full)
+            for rname, val, derived in rows:
+                print(f"{rname},{val:.3f},{derived}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},nan,FAILED: {type(e).__name__}: {e}", flush=True)
+        print(f"# {name} took {time.perf_counter()-t0:.0f}s", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,198 @@
+"""Paper Table 2 / Figure 1: environment + training throughput.
+
+Rows (this container is a single CPU core; ratios, not absolutes, are the
+validation target — the paper reports 27x-2820x vs CPU gym envs on a GPU):
+
+  random   — transition-function throughput: vmapped-jitted Chargax vs the
+             pure-Python reference env taking random actions,
+  ppo_1    — PPO wall-time per 100k env steps, 1 env,
+  ppo_16   — PPO wall-time per 100k env steps, 16 vectorized envs (the
+             paper's "typical training scenario"); the Python row drives the
+             Python env with the same jitted PPO maths (rollout on host —
+             the SB3+CUDA analogue).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.python_ref_env import PythonChargax
+from repro.core import ChargaxEnv, EnvConfig
+from repro.rl import PPOConfig, make_train
+
+
+def bench_jax_random(n_steps: int = 100_000, n_envs: int = 1024) -> float:
+    """Seconds per n_steps env transitions, vmapped + jitted."""
+    env = ChargaxEnv(EnvConfig())
+    params = env.default_params
+
+    @jax.jit
+    def rollout(key, state):
+        def body(carry, _):
+            key, state = carry
+            key, ka, ks = jax.random.split(key, 3)
+            actions = jax.random.randint(
+                ka, (n_envs, env.num_action_heads), 0, env.num_actions_per_head
+            )
+            keys = jax.random.split(ks, n_envs)
+            _, state, r, d, _ = jax.vmap(env.step, in_axes=(0, 0, 0, None))(
+                keys, state, actions, params
+            )
+            return (key, state), r.sum()
+
+        (_, state), rs = jax.lax.scan(body, (key, state), None, n_steps // n_envs)
+        return state, rs.sum()
+
+    key = jax.random.key(0)
+    _, state = jax.vmap(env.reset, in_axes=(0, None))(
+        jax.random.split(key, n_envs), params
+    )
+    state, _ = rollout(key, state)  # compile
+    jax.block_until_ready(state.t)
+    t0 = time.perf_counter()
+    state, s = rollout(key, state)
+    jax.block_until_ready(s)
+    return time.perf_counter() - t0
+
+
+def bench_python_random(n_steps: int = 20_000) -> float:
+    """Seconds per n_steps transitions of the python reference env (1 env)."""
+    env = PythonChargax()
+    env.reset()
+    t0 = time.perf_counter()
+    done_ctr = 0
+    for _ in range(n_steps):
+        _, _, done, _ = env.step(env.sample_action())
+        if done:
+            env.reset()
+            done_ctr += 1
+    return time.perf_counter() - t0
+
+
+def bench_jax_ppo(n_steps: int = 100_000, n_envs: int = 16) -> float:
+    env = ChargaxEnv(EnvConfig())
+    cfg = PPOConfig(
+        total_timesteps=n_steps, num_envs=n_envs,
+        rollout_steps=300 if n_envs > 1 else 512, hidden=(64, 64),
+    )
+    train = jax.jit(make_train(cfg, env))
+    out = train(jax.random.key(0))  # includes compile; time a second run
+    jax.block_until_ready(out["metrics"]["loss"])
+    t0 = time.perf_counter()
+    out = train(jax.random.key(1))
+    jax.block_until_ready(out["metrics"]["loss"])
+    return time.perf_counter() - t0
+
+
+def bench_python_ppo(n_steps: int = 10_000, n_envs: int = 16) -> float:
+    """Host-loop PPO: python envs, jitted policy/update (SB3+CUDA analogue)."""
+    from repro.rl import networks
+    from repro.optim import AdamWConfig, adamw_init, adamw_update, apply_updates
+
+    jenv = ChargaxEnv(EnvConfig())
+    envs = [PythonChargax(seed=i) for i in range(n_envs)]
+    obs = np.stack([e.reset() for e in envs])
+    n_heads, n_act = jenv.num_action_heads, jenv.num_actions_per_head
+    params = networks.init_actor_critic(jax.random.key(0), jenv.obs_dim, n_heads, n_act, (64, 64))
+    opt = adamw_init(params)
+    rollout = 128
+
+    @jax.jit
+    def act(params, key, obs):
+        out = networks.apply_actor_critic(params, obs, n_heads, n_act)
+        a = networks.sample_action(key, out.logits)
+        return a, networks.log_prob(out.logits, a), out.value
+
+    @jax.jit
+    def update(params, opt, obs_b, act_b, logp_b, adv_b, tgt_b):
+        def loss_fn(p):
+            out = networks.apply_actor_critic(p, obs_b, n_heads, n_act)
+            lp = networks.log_prob(out.logits, act_b)
+            ratio = jnp.exp(lp - logp_b)
+            adv = (adv_b - adv_b.mean()) / (adv_b.std() + 1e-8)
+            pg = -jnp.minimum(ratio * adv, jnp.clip(ratio, 0.8, 1.2) * adv).mean()
+            v = 0.5 * jnp.square(out.value - tgt_b).mean()
+            ent = networks.entropy(out.logits).mean()
+            return pg + 0.25 * v - 0.01 * ent
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        upd, opt, _ = adamw_update(grads, opt, params, 2.5e-4, AdamWConfig(max_grad_norm=100.0))
+        return apply_updates(params, upd), opt, loss
+
+    key = jax.random.key(0)
+    t0 = time.perf_counter()
+    steps_done = 0
+    while steps_done < n_steps:
+        obs_buf, act_buf, logp_buf, rew_buf, val_buf = [], [], [], [], []
+        for _ in range(rollout):
+            key, k = jax.random.split(key)
+            a, lp, v = act(params, k, jnp.asarray(obs))
+            a_np = np.asarray(a)
+            obs_buf.append(obs.copy())
+            nobs = np.empty_like(obs)
+            rews = np.empty(n_envs)
+            for i, e in enumerate(envs):
+                o, r, d, _ = e.step(a_np[i])
+                if d:
+                    o = e.reset()
+                nobs[i], rews[i] = o, r
+            act_buf.append(a_np)
+            logp_buf.append(np.asarray(lp))
+            val_buf.append(np.asarray(v))
+            rew_buf.append(rews * 0.1)
+            obs = nobs
+            steps_done += n_envs
+        # GAE on host
+        vals = np.stack(val_buf + [val_buf[-1]])
+        rews = np.stack(rew_buf)
+        adv = np.zeros_like(rews)
+        g = 0.0
+        for t in reversed(range(rollout)):
+            delta = rews[t] + 0.99 * vals[t + 1] - vals[t]
+            g = delta + 0.99 * 0.95 * g
+            adv[t] = g
+        tgt = adv + vals[:-1]
+        flat = lambda x: jnp.asarray(np.concatenate(x if isinstance(x, list) else list(x)))
+        params, opt, _ = update(
+            params, opt,
+            jnp.asarray(np.concatenate(obs_buf)), jnp.asarray(np.concatenate(act_buf)),
+            jnp.asarray(np.concatenate(logp_buf)), jnp.asarray(adv.reshape(-1)),
+            jnp.asarray(tgt.reshape(-1)),
+        )
+    return time.perf_counter() - t0
+
+
+def run(quick: bool = True) -> list[tuple[str, float, str]]:
+    """Returns rows: (name, us_per_env_step, derived)."""
+    rows = []
+    n_jax = 100_000
+    n_py = 10_000 if quick else 50_000
+    t_jax = bench_jax_random(n_jax)
+    t_py = bench_python_random(n_py)
+    us_jax = t_jax / n_jax * 1e6
+    us_py = t_py / n_py * 1e6
+    rows.append(("random_chargax_jax", us_jax, f"{n_jax/t_jax:,.0f} steps/s"))
+    rows.append(("random_python_ref", us_py, f"{n_py/t_py:,.0f} steps/s"))
+    rows.append(("random_speedup", us_py / us_jax, "x faster (paper: 27x-1144x)"))
+
+    n_ppo = 50_000 if quick else 100_000
+    t_ppo16 = bench_jax_ppo(n_ppo, 16)
+    t_ppo1 = bench_jax_ppo(25_000 if quick else 100_000, 1)
+    rows.append(("ppo16_chargax_jax", t_ppo16 / n_ppo * 1e6, f"{n_ppo/t_ppo16:,.0f} steps/s"))
+    rows.append(("ppo1_chargax_jax", t_ppo1 / (25_000 if quick else 100_000) * 1e6, ""))
+
+    n_pyppo = 5_000 if quick else 20_000
+    t_pyppo = bench_python_ppo(n_pyppo, 16)
+    rows.append(("ppo16_python_ref", t_pyppo / n_pyppo * 1e6, f"{n_pyppo/t_pyppo:,.0f} steps/s"))
+    rows.append(
+        ("ppo16_speedup", (t_pyppo / n_pyppo) / (t_ppo16 / n_ppo), "x faster (paper: 134x-2820x)")
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.2f},{derived}")

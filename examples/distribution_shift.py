@@ -1,0 +1,33 @@
+"""Paper Figure 5 in miniature: train on one price year, evaluate on another.
+
+Demonstrates the exogenous-state plug-in point: the SAME jitted agent and env
+run against any price series without recompilation (params, not config).
+
+    PYTHONPATH=src python examples/distribution_shift.py
+"""
+import jax
+
+from repro.core import ChargaxEnv, EnvConfig
+from repro.rl import PPOConfig, evaluate, make_ppo_policy, make_train
+
+
+def main():
+    env = ChargaxEnv(EnvConfig(scenario="shopping", traffic="medium"))
+    params_by_year = {y: env.make_params(price_year=y) for y in (2021, 2022, 2023)}
+
+    print("training on 2021 prices ...")
+    cfg = PPOConfig(total_timesteps=150_000, num_envs=8, rollout_steps=150, hidden=(64, 64))
+    train = jax.jit(make_train(cfg, env, env_params=params_by_year[2021]))
+    out = train(jax.random.key(0))
+    pol = make_ppo_policy(env)
+
+    print(f"{'eval year':>10} {'reward':>10} {'profit':>10}")
+    for year, p in params_by_year.items():
+        res = evaluate(env, pol, out["runner_state"].params, jax.random.key(1),
+                       16, env_params=p)
+        print(f"{year:>10} {res['episode_reward']:>10.0f} {res['daily_profit']:>10.0f}")
+    print("(2022 = synthetic energy-crisis regime; expect a shifted payoff)")
+
+
+if __name__ == "__main__":
+    main()

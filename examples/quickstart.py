@@ -1,0 +1,54 @@
+"""Quickstart: build Chargax, step it, train a small PPO agent, compare to
+the paper's baseline.  Runs in ~1 minute on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import ChargaxEnv, EnvConfig, make_baseline_max_action
+from repro.rl import PPOConfig, evaluate, make_ppo_policy, make_train
+from repro.rl.baselines import max_charge_policy
+
+
+def main():
+    # --- 1. the environment (paper Table 1 bundled scenario) ---------------
+    env = ChargaxEnv(
+        EnvConfig(scenario="shopping", traffic="medium", price_region="NL",
+                  price_year=2021, car_region="EU", architecture="paper_16")
+    )
+    key = jax.random.key(0)
+    obs, state = env.reset(key)
+    print(f"obs dim: {obs.shape[0]}, action heads: {env.num_action_heads} "
+          f"x {env.num_actions_per_head} levels")
+
+    # --- 2. step it with the paper's max-charge baseline --------------------
+    step = jax.jit(env.step)
+    action = make_baseline_max_action(env)
+    for t in range(12):  # one hour
+        key, k = jax.random.split(key)
+        obs, state, reward, done, info = step(k, state, action)
+    print(f"after 1h: {int(state.cars_served)} cars, "
+          f"profit so far EUR {float(state.profit_cum):.2f}")
+
+    # --- 3. train PPO briefly ------------------------------------------------
+    cfg = PPOConfig(total_timesteps=150_000, num_envs=8, rollout_steps=150,
+                    hidden=(64, 64))
+    print(f"training PPO for {cfg.total_timesteps:,} env steps ...")
+    train = jax.jit(make_train(cfg, env))
+    out = train(jax.random.key(1))
+    rr = out["metrics"]["rollout_reward"]
+    print(f"rollout reward: {float(rr[0]):.0f} -> {float(rr[-1]):.0f}")
+
+    # --- 4. evaluate against the baseline ------------------------------------
+    ppo = evaluate(env, make_ppo_policy(env), out["runner_state"].params,
+                   jax.random.key(2), 16)
+    base = evaluate(env, max_charge_policy(env), None, jax.random.key(2), 16)
+    print(f"PPO      daily profit EUR {ppo['daily_profit']:.0f}, "
+          f"missing {ppo['missing_kwh']:.0f} kWh")
+    print(f"baseline daily profit EUR {base['daily_profit']:.0f}, "
+          f"missing {base['missing_kwh']:.0f} kWh")
+
+
+if __name__ == "__main__":
+    main()

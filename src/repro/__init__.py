@@ -1,0 +1,2 @@
+"""Chargax at pod scale — see DESIGN.md."""
+__version__ = "1.0.0"

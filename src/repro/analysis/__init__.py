@@ -1,0 +1,5 @@
+"""Compiled-artifact analysis: HLO collective parsing + roofline model."""
+from repro.analysis.hlo import collective_stats
+from repro.analysis.roofline import HBM_BW, ICI_BW, PEAK_FLOPS, analyze_cell
+
+__all__ = ["collective_stats", "analyze_cell", "PEAK_FLOPS", "HBM_BW", "ICI_BW"]

@@ -1,0 +1,55 @@
+"""Architecture registry: ``--arch <id>`` resolution for every launcher.
+
+Each config module exposes ``full_config()`` (the exact assigned public
+config) and ``smoke_config()`` (a reduced same-family config for CPU tests).
+``applicable_shapes()`` encodes the per-arch shape-applicability rules from
+the assignment (DESIGN.md §4): encoder-only would skip decode (none here);
+``long_500k`` runs only for sub-quadratic archs (ssm / hybrid / gemma2's
+half-sliding-window stack).
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+
+ARCH_IDS = [
+    "whisper-base",
+    "zamba2-1.2b",
+    "qwen3-moe-30b-a3b",
+    "granite-moe-3b-a800m",
+    "qwen3-4b",
+    "chatglm3-6b",
+    "tinyllama-1.1b",
+    "gemma2-9b",
+    "chameleon-34b",
+    "rwkv6-3b",
+]
+
+_MODULES = {a: "repro.configs." + a.replace("-", "_").replace(".", "p") for a in ARCH_IDS}
+
+# archs whose long_500k cell runs (sub-quadratic sequence mixing)
+LONG_CONTEXT_OK = {"zamba2-1.2b", "rwkv6-3b", "gemma2-9b"}
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; have {ARCH_IDS}")
+    mod = importlib.import_module(_MODULES[arch])
+    return mod.smoke_config() if smoke else mod.full_config()
+
+
+def applicable_shapes(arch: str) -> list[ShapeConfig]:
+    out = []
+    for name, shape in SHAPES.items():
+        if name == "long_500k" and arch not in LONG_CONTEXT_OK:
+            continue
+        out.append(shape)
+    return out
+
+
+def build_model(cfg: ModelConfig):
+    from repro.models.encdec import EncDecLM
+    from repro.models.lm import CausalLM
+
+    return EncDecLM(cfg) if cfg.family == "encdec" else CausalLM(cfg)

@@ -1,0 +1,17 @@
+"""Chargax core: the paper's contribution as a composable JAX module."""
+from repro.core.env import ChargaxEnv, EnvConfig, make_baseline_max_action
+from repro.core.state import EnvParams, EnvState, RewardWeights
+from repro.core import station, datasets, transition, rewards
+
+__all__ = [
+    "ChargaxEnv",
+    "EnvConfig",
+    "EnvParams",
+    "EnvState",
+    "RewardWeights",
+    "make_baseline_max_action",
+    "station",
+    "datasets",
+    "transition",
+    "rewards",
+]

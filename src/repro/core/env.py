@@ -1,0 +1,342 @@
+"""Chargax environment — public API (gymnax-style functional env).
+
+    env = ChargaxEnv(EnvConfig(scenario="shopping"))
+    obs, state = env.reset(key)
+    obs, state, reward, done, info = env.step(key, state, action)
+
+``reset``/``step`` are pure and jit/vmap/scan-compatible; all configuration
+that changes array *shapes* or python control flow lives in the static
+``EnvConfig``, everything numeric lives in the ``EnvParams`` pytree so sweeps
+(alpha weights, price years, traffic levels) never recompile.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import cached_property
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import datasets, station
+from repro.core.rewards import compute_reward, step_energies
+from repro.core.state import EnvParams, EnvState, RewardWeights
+from repro.core.transition import (
+    apply_actions,
+    arrive_cars,
+    charge_cars,
+    charge_rate,
+    decode_action,
+    depart_cars,
+)
+from repro.utils import replace, steps_per_day
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvConfig:
+    """Static environment configuration (hashable; part of the jit cache key)."""
+
+    # scenario selection (paper Table 1)
+    scenario: str = "shopping"  # user profile: highway|residential|work|shopping
+    traffic: str = "medium"  # low|medium|high
+    price_region: str = "NL"  # NL|FR|DE
+    price_year: int = 2021
+    car_region: str = "EU"  # EU|US|World
+    architecture: str = "paper_16"  # key into station.ARCHITECTURES
+    # timing
+    dt_minutes: float = 5.0
+    episode_hours: float = 24.0
+    # action space
+    discretization: int = 10  # paper Table 3
+    allow_v2g: bool = False  # car discharging
+    action_mode: str = "direct"  # "direct" | "delta"
+    # battery
+    battery: bool = True
+    # observation
+    obs_price_horizon_hours: float = 4.0
+
+    @property
+    def steps_per_day(self) -> int:
+        return steps_per_day(self.dt_minutes)
+
+    @property
+    def episode_steps(self) -> int:
+        return int(round(self.episode_hours * 60.0 / self.dt_minutes))
+
+    @property
+    def dt_hours(self) -> float:
+        return self.dt_minutes / 60.0
+
+
+class ChargaxEnv:
+    """Paper's environment. Instances are cheap; arrays live in ``default_params``."""
+
+    def __init__(self, config: EnvConfig | None = None):
+        self.config = config or EnvConfig()
+        layout = station.ARCHITECTURES[self.config.architecture]()
+        # the env config is authoritative about battery presence
+        if layout.battery.enabled != self.config.battery:
+            layout = dataclasses.replace(
+                layout,
+                battery=dataclasses.replace(
+                    layout.battery, enabled=self.config.battery
+                ),
+            )
+        self.layout = layout
+        self.n_evse = layout.n_evse
+
+    # ------------------------------------------------------------------
+    # Parameters
+    # ------------------------------------------------------------------
+    @cached_property
+    def default_params(self) -> EnvParams:
+        return self.make_params()
+
+    def make_params(
+        self,
+        weights: RewardWeights | None = None,
+        price_year: int | None = None,
+        traffic: str | None = None,
+    ) -> EnvParams:
+        cfg, lay = self.config, self.layout
+        prices = datasets.price_profile(
+            cfg.price_region, price_year or cfg.price_year, cfg.dt_minutes
+        )
+        arrivals = datasets.arrival_rate_curve(
+            cfg.scenario, traffic or cfg.traffic, cfg.dt_minutes
+        )
+        cars = datasets.car_table(cfg.car_region)
+        user = datasets.user_profile_params(cfg.scenario)
+        stay_mean, stay_sigma = user["stay"]
+        # lognormal: E[X] = exp(mu + sigma^2/2) -> mu = log(mean) - sigma^2/2
+        stay_mu_log = float(np.log(stay_mean) - 0.5 * stay_sigma**2)
+
+        # battery column participates in the root constraint only
+        batt_col = np.zeros((lay.n_nodes, 1), dtype=np.float32)
+        if lay.battery.enabled:
+            batt_col[0, 0] = 1.0
+        member = np.concatenate([lay.member, batt_col], axis=1)
+
+        b = lay.battery
+        benabled = float(b.enabled)
+        return EnvParams(
+            member=jnp.asarray(member),
+            node_budget=jnp.asarray(lay.node_limit * lay.node_eff),
+            evse_voltage=jnp.asarray(lay.evse_voltage),
+            evse_max_current=jnp.asarray(lay.evse_max_current),
+            evse_path_eff=jnp.asarray(lay.evse_path_eff),
+            evse_is_dc=jnp.asarray(lay.evse_is_dc),
+            batt_voltage=jnp.float32(b.voltage),
+            batt_max_current=jnp.float32(b.max_current * benabled),
+            batt_capacity=jnp.float32(b.capacity_kwh),
+            batt_eff=jnp.float32(b.efficiency),
+            batt_tau=jnp.float32(b.tau),
+            batt_init_soc=jnp.float32(b.init_soc * benabled),
+            price_buy_table=jnp.asarray(prices),
+            arrival_rate=jnp.asarray(arrivals),
+            car_probs=jnp.asarray(cars[:, 0]),
+            car_capacity=jnp.asarray(cars[:, 1]),
+            car_ac_kw=jnp.asarray(cars[:, 2]),
+            car_dc_kw=jnp.asarray(cars[:, 3]),
+            car_tau=jnp.asarray(cars[:, 4]),
+            stay_mu_log=jnp.float32(stay_mu_log),
+            stay_sigma=jnp.float32(stay_sigma),
+            target_soc_mu=jnp.float32(user["target"][0]),
+            target_soc_std=jnp.float32(user["target"][1]),
+            soc0_a=jnp.float32(user["soc0"][0]),
+            soc0_b=jnp.float32(user["soc0"][1]),
+            p_time_sensitive=jnp.float32(user["p_time_sensitive"]),
+            p_sell=jnp.float32(0.75),  # Table 3
+            grid_sell_discount=jnp.float32(0.9),
+            facility_cost=jnp.float32(0.25),  # EUR per 5-min step
+            moer_scale=jnp.float32(0.4),
+            grid_demand_amp=jnp.float32(20.0),
+            weights=weights or RewardWeights(),
+        )
+
+    # ------------------------------------------------------------------
+    # Spaces
+    # ------------------------------------------------------------------
+    @property
+    def num_action_heads(self) -> int:
+        """N EVSEs + 1 battery head (paper: battery = (N+1)-th pole)."""
+        return self.n_evse + 1
+
+    @property
+    def num_actions_per_head(self) -> int:
+        return 2 * self.config.discretization + 1
+
+    @property
+    def obs_dim(self) -> int:
+        n = self.n_evse
+        return 7 * n + 2 + 4 + 3  # ports, battery, time feats, price feats
+
+    def sample_action(self, key: jax.Array) -> jnp.ndarray:
+        return jax.random.randint(
+            key, (self.num_action_heads,), 0, self.num_actions_per_head
+        )
+
+    # ------------------------------------------------------------------
+    # Reset / step
+    # ------------------------------------------------------------------
+    def reset(
+        self, key: jax.Array, params: EnvParams | None = None
+    ) -> tuple[jnp.ndarray, EnvState]:
+        params = params if params is not None else self.default_params
+        n = self.n_evse
+        k_day, _ = jax.random.split(key)
+        # exploring-starts over the price dataset (paper App. B.1): pick a day
+        day = jax.random.randint(k_day, (), 0, params.price_buy_table.shape[0])
+        zf = jnp.zeros((n,), jnp.float32)
+        zi = jnp.zeros((n,), jnp.int32)
+        state = EnvState(
+            evse_current=zf,
+            occupied=zf,
+            soc=zf,
+            e_remain=zf,
+            batt_current=jnp.float32(0.0),
+            batt_soc=params.batt_init_soc,
+            t_remain=zi,
+            rhat=zf,
+            cap=zf,
+            rbar=zf,
+            tau=zf,
+            user_type=zf,
+            t=jnp.int32(0),
+            day=day,
+            price_buy=params.price_buy_table[day],
+            profit_cum=jnp.float32(0.0),
+            energy_delivered=jnp.float32(0.0),
+            cars_served=jnp.float32(0.0),
+            cars_rejected=jnp.float32(0.0),
+            missing_kwh_cum=jnp.float32(0.0),
+            overtime_steps_cum=jnp.float32(0.0),
+        )
+        return self.observe(state, params), state
+
+    def step(
+        self,
+        key: jax.Array,
+        state: EnvState,
+        action: jnp.ndarray,
+        params: EnvParams | None = None,
+    ) -> tuple[jnp.ndarray, EnvState, jnp.ndarray, jnp.ndarray, dict]:
+        params = params if params is not None else self.default_params
+        cfg = self.config
+        dt = cfg.dt_hours
+
+        # -- decode action ------------------------------------------------
+        if cfg.action_mode == "direct":
+            tgt_evse, tgt_batt = decode_action(
+                action,
+                cfg.discretization,
+                cfg.allow_v2g,
+                params.evse_max_current,
+                params.batt_max_current,
+            )
+        elif cfg.action_mode == "delta":  # paper's additive form
+            d_evse, d_batt = decode_action(
+                action,
+                cfg.discretization,
+                True,  # deltas may be negative even without v2g...
+                params.evse_max_current,
+                params.batt_max_current,
+            )
+            tgt_evse = state.evse_current + d_evse
+            if not cfg.allow_v2g:
+                tgt_evse = jnp.maximum(tgt_evse, 0.0)  # ...but targets may not
+            tgt_batt = state.batt_current + d_batt
+        else:
+            raise ValueError(f"unknown action_mode {cfg.action_mode!r}")
+
+        # -- 4-stage transition (paper App. A.2) ---------------------------
+        applied = apply_actions(params, state, tgt_evse, tgt_batt, dt)
+        charged = charge_cars(params, state, applied, dt)
+        departed = depart_cars(charged.state)
+        key, k_arr = jax.random.split(key)
+        arrived = arrive_cars(params, departed.state, k_arr)
+
+        # -- reward ---------------------------------------------------------
+        energies = step_energies(params, charged.e_car, charged.e_batt_net)
+        spd = state.price_buy.shape[0]
+        p_buy = state.price_buy[jnp.mod(state.t, spd)]
+        reward, pi, pen = compute_reward(
+            params,
+            energies,
+            p_buy,
+            applied.constraint_excess,
+            departed.missing_kwh,
+            departed.overtime_steps,
+            departed.early_steps,
+            arrived.n_rejected,
+            charged.e_car,
+            state.t,
+            state.price_buy,
+        )
+
+        new_state = replace(
+            arrived.state,
+            t=state.t + 1,
+            profit_cum=state.profit_cum + pi,
+        )
+        done = new_state.t >= cfg.episode_steps
+        info = {
+            "profit": pi,
+            "reward": reward,
+            "e_net": energies.e_net,
+            "e_grid_net": energies.e_grid_net,
+            "constraint_excess": pen.constraint,
+            "missing_kwh": pen.satisfaction_time,
+            "overtime_steps": departed.overtime_steps,
+            "rejected": pen.rejected,
+            "arrived": arrived.n_arrived.astype(jnp.float32),
+            "price_buy": p_buy,
+        }
+        return self.observe(new_state, params), new_state, reward, done, info
+
+    # ------------------------------------------------------------------
+    # Observation
+    # ------------------------------------------------------------------
+    def observe(self, state: EnvState, params: EnvParams) -> jnp.ndarray:
+        cfg = self.config
+        spd = cfg.steps_per_day
+        imax = params.evse_max_current
+        port_feats = jnp.stack(
+            [
+                state.occupied,
+                state.evse_current / imax,
+                state.soc,
+                state.e_remain / jnp.maximum(state.cap, 1.0),
+                jnp.clip(state.t_remain.astype(jnp.float32) / spd, -1.0, 1.0),
+                state.rhat / imax,
+                state.user_type,
+            ],
+            axis=-1,
+        ).reshape(-1)
+        batt_feats = jnp.stack(
+            [state.batt_soc, state.batt_current / jnp.maximum(params.batt_max_current, 1.0)]
+        )
+        tf = state.t.astype(jnp.float32)
+        phase = 2.0 * jnp.pi * tf / spd
+        weekday = ((state.day % 7) < 5).astype(jnp.float32)
+        time_feats = jnp.stack(
+            [jnp.sin(phase), jnp.cos(phase), weekday, state.day.astype(jnp.float32) / 365.0]
+        )
+        idx = jnp.mod(state.t, spd)
+        horizon = max(int(cfg.obs_price_horizon_hours * spd / 24), 1)
+        ahead = state.price_buy[jnp.mod(idx + jnp.arange(horizon), spd)]
+        near = max(int(spd / 24), 1)
+        price_feats = jnp.stack(
+            [state.price_buy[idx], jnp.mean(ahead[:near]), jnp.mean(ahead)]
+        )
+        return jnp.concatenate([port_feats, batt_feats, time_feats, price_feats])
+
+
+def make_baseline_max_action(env: ChargaxEnv) -> jnp.ndarray:
+    """Paper's baseline: 'always charge to maximum potential'.
+
+    Max level on every EVSE head; battery idle (centre level).
+    """
+    d = env.config.discretization
+    a = jnp.full((env.num_action_heads,), 2 * d, dtype=jnp.int32)
+    return a.at[-1].set(d)  # battery: 0 amps

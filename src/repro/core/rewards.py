@@ -1,0 +1,123 @@
+"""Reward algebra (paper §4 "Reward Function", Appendix A.3).
+
+``profit`` implements Eq. 1/2; ``compute_reward`` implements Eq. 3/7:
+``r(t) = Pi(t) - sum_c alpha_c * c(t)`` with the paper's bundled penalty terms.
+Every term is always computed and returned in ``info`` (they are cheap), so
+evaluation can report satisfaction/sustainability metrics even when their
+alpha weight is zero.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core.state import EnvParams
+
+
+class StepEnergies(NamedTuple):
+    """Grid-side energy bookkeeping for one step (all kWh, signed)."""
+
+    e_net: jnp.ndarray  # sum_i V_i I_i dt — energy billed to customers
+    e_grid_in: jnp.ndarray  # bought from grid (>0), efficiency-inflated
+    e_grid_out: jnp.ndarray  # sold to grid (<0), efficiency-deflated
+    e_batt_net: jnp.ndarray  # battery grid-side energy (signed)
+    e_grid_net: jnp.ndarray  # Eq. 1 total
+
+
+def step_energies(
+    params: EnvParams, e_car: jnp.ndarray, e_batt: jnp.ndarray
+) -> StepEnergies:
+    """Aggregate per-port car energies (kWh, signed) into Eq. 1 terms."""
+    e_net = jnp.sum(e_car)
+    eff = params.evse_path_eff
+    e_grid_in = jnp.sum(jnp.where(e_car > 0, e_car / eff, 0.0))
+    e_grid_out = jnp.sum(jnp.where(e_car < 0, e_car * eff, 0.0))
+    e_grid_net = e_grid_in + e_grid_out + e_batt
+    return StepEnergies(e_net, e_grid_in, e_grid_out, e_batt, e_grid_net)
+
+
+def profit(
+    params: EnvParams,
+    energies: StepEnergies,
+    p_buy: jnp.ndarray,  # () EUR/kWh this step
+) -> jnp.ndarray:
+    """Eq. 2.  p_sell,grid is a discounted buy price (net sellback)."""
+    p_sell_grid = params.grid_sell_discount * p_buy
+    grid_cost = jnp.where(
+        energies.e_grid_net > 0,
+        p_buy * energies.e_grid_net,
+        p_sell_grid * energies.e_grid_net,
+    )
+    return params.p_sell * energies.e_net - grid_cost - params.facility_cost
+
+
+class PenaltyTerms(NamedTuple):
+    constraint: jnp.ndarray
+    satisfaction_time: jnp.ndarray
+    satisfaction_charge: jnp.ndarray
+    sustainability: jnp.ndarray
+    rejected: jnp.ndarray
+    degradation: jnp.ndarray
+    grid_stability: jnp.ndarray
+
+
+def moer(params: EnvParams, t: jnp.ndarray, price_buy: jnp.ndarray) -> jnp.ndarray:
+    """Synthetic marginal-operating-emissions-rate curve, kgCO2/kWh.
+
+    Correlated with the (scarcity-driven) price curve — the standard stand-in
+    when real MOER feeds (WattTime) are unavailable offline.
+    """
+    spd = price_buy.shape[0]
+    p = price_buy[jnp.mod(t, spd)]
+    pm = jnp.mean(price_buy)
+    return params.moer_scale * jnp.clip(p / jnp.maximum(pm, 1e-6), 0.2, 3.0)
+
+
+def grid_demand(params: EnvParams, t: jnp.ndarray, spd: int) -> jnp.ndarray:
+    """Synthetic exogenous grid-demand signal d_grid(t) [kWh per step]."""
+    phase = 2.0 * jnp.pi * (t.astype(jnp.float32) / spd)
+    return params.grid_demand_amp * (0.6 + 0.4 * jnp.sin(phase - 0.5 * jnp.pi))
+
+
+def compute_reward(
+    params: EnvParams,
+    energies: StepEnergies,
+    p_buy: jnp.ndarray,
+    constraint_excess: jnp.ndarray,
+    missing_kwh: jnp.ndarray,
+    overtime_steps: jnp.ndarray,
+    early_steps: jnp.ndarray,
+    n_rejected: jnp.ndarray,
+    e_car: jnp.ndarray,
+    t: jnp.ndarray,
+    price_buy_day: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray, PenaltyTerms]:
+    """Returns (reward, profit, penalties) for one step."""
+    w = params.weights
+    pi = profit(params, energies, p_buy)
+
+    pen = PenaltyTerms(
+        constraint=constraint_excess,
+        satisfaction_time=missing_kwh,
+        satisfaction_charge=overtime_steps - w.early_finish_beta * early_steps,
+        sustainability=moer(params, t, price_buy_day)
+        * jnp.maximum(energies.e_grid_net, 0.0),
+        rejected=n_rejected.astype(jnp.float32),
+        degradation=jnp.abs(jnp.minimum(energies.e_batt_net, 0.0))
+        + jnp.sum(jnp.abs(jnp.minimum(e_car, 0.0))),
+        grid_stability=jnp.abs(
+            energies.e_net - grid_demand(params, t, price_buy_day.shape[0])
+        ),
+    )
+    reward = (
+        pi
+        - w.constraint * pen.constraint
+        - w.satisfaction_time * pen.satisfaction_time
+        - w.satisfaction_charge * pen.satisfaction_charge
+        - w.sustainability * pen.sustainability
+        - w.rejected * pen.rejected
+        - w.degradation * pen.degradation
+        - w.grid_stability * pen.grid_stability
+    )
+    return reward, pi, pen

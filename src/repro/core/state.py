@@ -1,0 +1,107 @@
+"""State & parameter pytrees for Chargax (paper §4, Appendix A.1, Table 4).
+
+The state is split *explicitly* into endogenous fields (evolved by
+``transition.py`` as a function of the action) and exogenous fields (sampled
+from bundled time-series data at reset, evolving independently of actions) —
+the paper's Eq. 4 factorisation.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.utils import pytree_dataclass
+
+
+@pytree_dataclass
+class RewardWeights:
+    """alpha_c coefficients of Eq. 3 (all default 0, matching Table 3)."""
+
+    constraint: jnp.ndarray | float = 0.0
+    satisfaction_time: jnp.ndarray | float = 0.0  # c_sat,0: missing kWh at deadline
+    satisfaction_charge: jnp.ndarray | float = 0.0  # c_sat,1: overtime steps
+    sustainability: jnp.ndarray | float = 0.0  # MOER-weighted grid energy
+    rejected: jnp.ndarray | float = 0.0  # declined cars
+    degradation: jnp.ndarray | float = 0.0  # battery + car discharge wear
+    grid_stability: jnp.ndarray | float = 0.0  # |E_net - d_grid|
+    early_finish_beta: jnp.ndarray | float = 0.0  # beta inside c_sat,1
+
+
+@pytree_dataclass
+class EnvParams:
+    """Everything the transition reads that is *not* per-step state.
+
+    Station arrays come from :class:`repro.core.station.StationLayout`; data
+    tables from :mod:`repro.core.datasets`.  All are jnp arrays so scenario
+    sweeps (e.g. alpha sweeps, price-year sweeps) do not recompile.
+    """
+
+    # --- station architecture (flattened tree; battery = extra leaf column) ---
+    member: jnp.ndarray  # (n_nodes, n_evse + 1)
+    node_budget: jnp.ndarray  # (n_nodes,)  eta_H * I_H  [A]
+    evse_voltage: jnp.ndarray  # (n_evse,)
+    evse_max_current: jnp.ndarray  # (n_evse,)
+    evse_path_eff: jnp.ndarray  # (n_evse,)
+    evse_is_dc: jnp.ndarray  # (n_evse,)
+    # --- station battery ---
+    batt_voltage: jnp.ndarray | float
+    batt_max_current: jnp.ndarray | float
+    batt_capacity: jnp.ndarray | float
+    batt_eff: jnp.ndarray | float
+    batt_tau: jnp.ndarray | float
+    batt_init_soc: jnp.ndarray | float
+    # --- exogenous data tables ---
+    price_buy_table: jnp.ndarray  # (365, steps_per_day) EUR/kWh
+    arrival_rate: jnp.ndarray  # (steps_per_day,) expected cars / step
+    car_probs: jnp.ndarray  # (n_models,)
+    car_capacity: jnp.ndarray  # (n_models,) kWh
+    car_ac_kw: jnp.ndarray  # (n_models,)
+    car_dc_kw: jnp.ndarray  # (n_models,)
+    car_tau: jnp.ndarray  # (n_models,)
+    # --- user profile ---
+    stay_mu_log: jnp.ndarray | float  # lognormal params of stay duration [h]
+    stay_sigma: jnp.ndarray | float
+    target_soc_mu: jnp.ndarray | float
+    target_soc_std: jnp.ndarray | float
+    soc0_a: jnp.ndarray | float
+    soc0_b: jnp.ndarray | float
+    p_time_sensitive: jnp.ndarray | float
+    # --- economics ---
+    p_sell: jnp.ndarray | float  # EUR/kWh charged to customers (Table 3: 0.75)
+    grid_sell_discount: jnp.ndarray | float  # p_sell,grid = discount * p_buy
+    facility_cost: jnp.ndarray | float  # c_dt, EUR per step
+    moer_scale: jnp.ndarray | float  # kgCO2/kWh scale of the synthetic MOER curve
+    grid_demand_amp: jnp.ndarray | float  # amplitude of synthetic d_grid
+    # --- reward ---
+    weights: RewardWeights
+
+
+@pytree_dataclass
+class EnvState:
+    """Per-environment dynamic state (Appendix A.1 / Table 4)."""
+
+    # ---- endogenous: EVSE ports ----
+    evse_current: jnp.ndarray  # (N,) signed amps, I_drawn
+    occupied: jnp.ndarray  # (N,) {0,1}
+    soc: jnp.ndarray  # (N,) state of charge of plugged car
+    e_remain: jnp.ndarray  # (N,) kWh still requested
+    # ---- endogenous: station battery ----
+    batt_current: jnp.ndarray  # () signed amps
+    batt_soc: jnp.ndarray  # ()
+    # ---- exogenous per plugged car (fixed until departure) ----
+    t_remain: jnp.ndarray  # (N,) int32 steps until user deadline (may go <0)
+    rhat: jnp.ndarray  # (N,) amps, car max current at current SoC
+    cap: jnp.ndarray  # (N,) kWh car battery capacity
+    rbar: jnp.ndarray  # (N,) amps, car max current at this port's voltage
+    tau: jnp.ndarray  # (N,) charge-curve knee
+    user_type: jnp.ndarray  # (N,) 0 = time-sensitive, 1 = charge-sensitive
+    # ---- exogenous: episode-level ----
+    t: jnp.ndarray  # () int32 step within episode
+    day: jnp.ndarray  # () int32 day-of-year used for price row
+    price_buy: jnp.ndarray  # (steps_per_day,) this episode's buy price
+    # ---- bookkeeping (for info/eval; not observed) ----
+    profit_cum: jnp.ndarray  # ()
+    energy_delivered: jnp.ndarray  # () kWh into cars
+    cars_served: jnp.ndarray  # ()
+    cars_rejected: jnp.ndarray  # ()
+    missing_kwh_cum: jnp.ndarray  # () unmet charge at forced departures
+    overtime_steps_cum: jnp.ndarray  # () overtime of charge-sensitive users

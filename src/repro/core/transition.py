@@ -1,0 +1,305 @@
+"""Chargax transition function (paper §4 "Transition Function", Appendix A.2).
+
+Four sequential stages, all pure jnp (jit/vmap/scan-able):
+
+  1. apply_actions   — set port/battery currents, clip by car curve & port
+                       limits, enforce the tree constraints of Eq. 5,
+  2. charge          — integrate energy over dt (constant-rate assumption),
+  3. departures      — time-sensitive (u=0) leave at deadline, charge-
+                       sensitive (u=1) leave when the request is met,
+  4. arrivals        — Poisson arrivals, first-come-first-served onto the
+                       first free ports, profiles sampled from bundled data.
+
+The per-stage functions are exposed separately because the fused Pallas kernel
+(`repro/kernels/chargax_step`) implements stages 1-2 and must match them
+bit-for-bit in the interpret-mode tests.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.state import EnvParams, EnvState
+from repro.utils import replace
+
+
+# ---------------------------------------------------------------------------
+# Charging curve (Appendix A: piece-wise linear; discharge = vertical flip
+# of the charge curve at SoC = 0.5)
+# ---------------------------------------------------------------------------
+def charge_rate(soc: jnp.ndarray, rbar: jnp.ndarray, tau: jnp.ndarray) -> jnp.ndarray:
+    """r_hat_{tau, rbar}(SoC): max charge current at the given state of charge."""
+    return jnp.where(soc <= tau, rbar, rbar * (1.0 - soc) / jnp.maximum(1.0 - tau, 1e-6))
+
+
+def discharge_rate(soc: jnp.ndarray, rbar: jnp.ndarray, tau: jnp.ndarray) -> jnp.ndarray:
+    """Discharge limit: the charge curve flipped at SoC=0.5 (paper App. A.1)."""
+    return charge_rate(1.0 - soc, rbar, tau)
+
+
+# ---------------------------------------------------------------------------
+# Stage 1: apply actions + Eq. 5 constraint enforcement
+# ---------------------------------------------------------------------------
+class AppliedActions(NamedTuple):
+    evse_current: jnp.ndarray  # (N,) post-constraint signed amps
+    batt_current: jnp.ndarray  # ()
+    constraint_excess: jnp.ndarray  # () max pre-rescale node violation [A]
+
+
+def decode_action(
+    action: jnp.ndarray,
+    discretization: int,
+    allow_v2g: bool,
+    evse_max_current: jnp.ndarray,
+    batt_max_current: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Map a discrete factorized action (N+1,) int32 in [0, 2D] to target amps.
+
+    Level k maps to ((k - D)/D) * I_max: the paper's "10%, 20%, ... up to 100%"
+    discretisation, extended symmetrically for discharging.  Ports without V2G
+    clip negative targets to 0 (the battery head always may discharge).
+    """
+    d = float(discretization)
+    frac = (action.astype(jnp.float32) - d) / d  # [-1, 1]
+    port_frac, batt_frac = frac[:-1], frac[-1]
+    if not allow_v2g:
+        port_frac = jnp.maximum(port_frac, 0.0)
+    return port_frac * evse_max_current, batt_frac * batt_max_current
+
+
+def constraint_scale(
+    currents: jnp.ndarray,  # (n_leaves,) signed amps (EVSEs + battery column)
+    member: jnp.ndarray,  # (n_nodes, n_leaves)
+    node_budget: jnp.ndarray,  # (n_nodes,) eta_H * I_H
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-leaf multiplicative scale enforcing Eq. 5 on every subtree.
+
+    We use the conservative cable-thermal reading of Eq. 5 — each node carries
+    the sum of *magnitudes* of its subtree currents (DESIGN.md §7).  With
+    ``scale_j = min_{H ∋ j} s_H`` and ``s_H = budget_H / load_H`` the invariant
+    ``sum_j |I_j * scale_j| <= budget_H`` holds for every node H, which the
+    hypothesis tests assert.
+
+    Returns (per-leaf scale in (0, 1], max pre-rescale node excess in amps).
+    """
+    load = member @ jnp.abs(currents)  # (n_nodes,)
+    s_node = jnp.minimum(1.0, node_budget / jnp.maximum(load, 1e-9))
+    excess = jnp.max(jnp.maximum(load - node_budget, 0.0))
+    # min over ancestors; a leaf with no constrained ancestor is unscaled
+    per_leaf = jnp.where(member > 0, s_node[:, None], jnp.inf)
+    scale = jnp.min(per_leaf, axis=0)
+    return jnp.where(jnp.isfinite(scale), scale, 1.0), excess
+
+
+def apply_actions(
+    params: EnvParams,
+    state: EnvState,
+    target_evse: jnp.ndarray,  # (N,) requested amps (signed)
+    target_batt: jnp.ndarray,  # () requested amps (signed)
+    dt_hours: float,
+) -> AppliedActions:
+    # --- per-port physical clips -------------------------------------------
+    rhat_chg = charge_rate(state.soc, state.rbar, state.tau)
+    rhat_dis = discharge_rate(state.soc, state.rbar, state.tau)
+    # energy-headroom clips: never overshoot the request nor the pack bounds
+    v = params.evse_voltage
+    max_chg_amp_req = state.e_remain * 1000.0 / jnp.maximum(v * dt_hours, 1e-9)
+    max_chg_amp_soc = (
+        (1.0 - state.soc) * state.cap * 1000.0 / jnp.maximum(v * dt_hours, 1e-9)
+    )
+    max_dis_amp_soc = state.soc * state.cap * 1000.0 / jnp.maximum(v * dt_hours, 1e-9)
+
+    up = jnp.minimum(
+        jnp.minimum(rhat_chg, params.evse_max_current),
+        jnp.minimum(max_chg_amp_req, max_chg_amp_soc),
+    )
+    down = -jnp.minimum(jnp.minimum(rhat_dis, params.evse_max_current), max_dis_amp_soc)
+    i_evse = jnp.clip(target_evse, down, jnp.maximum(up, 0.0))
+    i_evse = i_evse * state.occupied  # empty ports draw nothing
+
+    # --- battery clips ------------------------------------------------------
+    bv = params.batt_voltage
+    b_chg = charge_rate(state.batt_soc, params.batt_max_current, params.batt_tau)
+    b_dis = discharge_rate(state.batt_soc, params.batt_max_current, params.batt_tau)
+    # efficiency: charging stores eta*E, discharging drains E/eta
+    b_up_soc = (
+        (1.0 - state.batt_soc)
+        * params.batt_capacity
+        * 1000.0
+        / jnp.maximum(bv * dt_hours * params.batt_eff, 1e-9)
+    )
+    b_dn_soc = (
+        state.batt_soc
+        * params.batt_capacity
+        * params.batt_eff
+        * 1000.0
+        / jnp.maximum(bv * dt_hours, 1e-9)
+    )
+    i_batt = jnp.clip(target_batt, -jnp.minimum(b_dis, b_dn_soc), jnp.minimum(b_chg, b_up_soc))
+
+    # --- Eq. 5 tree constraints (battery = extra leaf on the root) ----------
+    leaf_currents = jnp.concatenate([i_evse, i_batt[None]])
+    scale, excess = constraint_scale(leaf_currents, params.member, params.node_budget)
+    leaf_currents = leaf_currents * scale
+    return AppliedActions(leaf_currents[:-1], leaf_currents[-1], excess)
+
+
+# ---------------------------------------------------------------------------
+# Stage 2: charge stationed cars (constant rate over dt)
+# ---------------------------------------------------------------------------
+class ChargeResult(NamedTuple):
+    state: EnvState
+    e_car: jnp.ndarray  # (N,) kWh delivered into each car this step (signed)
+    e_batt_net: jnp.ndarray  # () kWh grid-side battery energy (signed)
+
+
+def charge_cars(
+    params: EnvParams, state: EnvState, applied: AppliedActions, dt_hours: float
+) -> ChargeResult:
+    e_car = params.evse_voltage * applied.evse_current * dt_hours / 1000.0  # kWh
+    soc = jnp.clip(state.soc + e_car / jnp.maximum(state.cap, 1e-6), 0.0, 1.0)
+    e_remain = jnp.maximum(state.e_remain - e_car, 0.0)
+    rhat = charge_rate(soc, state.rbar, state.tau) * state.occupied
+    t_remain = state.t_remain - 1
+
+    # battery: store eta*E when charging, deliver E*eta grid-side when discharging
+    e_b = params.batt_voltage * applied.batt_current * dt_hours / 1000.0
+    batt_soc = jnp.clip(
+        state.batt_soc
+        + jnp.where(e_b >= 0, e_b * params.batt_eff, e_b / params.batt_eff)
+        / jnp.maximum(params.batt_capacity, 1e-6),
+        0.0,
+        1.0,
+    )
+
+    new_state = replace(
+        state,
+        evse_current=applied.evse_current,
+        soc=soc,
+        e_remain=e_remain,
+        rhat=rhat,
+        t_remain=t_remain,
+        batt_current=applied.batt_current,
+        batt_soc=batt_soc,
+        energy_delivered=state.energy_delivered + jnp.sum(jnp.maximum(e_car, 0.0)),
+    )
+    return ChargeResult(new_state, e_car, e_b)
+
+
+# ---------------------------------------------------------------------------
+# Stage 3: departures
+# ---------------------------------------------------------------------------
+class DepartResult(NamedTuple):
+    state: EnvState
+    missing_kwh: jnp.ndarray  # () c_sat,0 numerator: unmet charge of u=0 leavers
+    overtime_steps: jnp.ndarray  # () overtime of u=1 leavers (steps)
+    early_steps: jnp.ndarray  # () early-finish steps of u=1 leavers
+
+
+def depart_cars(state: EnvState) -> DepartResult:
+    occ = state.occupied > 0.5
+    leave_time = occ & (state.user_type < 0.5) & (state.t_remain <= 0)
+    leave_charge = occ & (state.user_type >= 0.5) & (state.e_remain <= 1e-6)
+    leaving = leave_time | leave_charge
+
+    missing = jnp.sum(jnp.where(leave_time, jnp.maximum(state.e_remain, 0.0), 0.0))
+    over = jnp.sum(
+        jnp.where(leave_charge, jnp.maximum(-state.t_remain, 0).astype(jnp.float32), 0.0)
+    )
+    early = jnp.sum(
+        jnp.where(leave_charge, jnp.maximum(state.t_remain, 0).astype(jnp.float32), 0.0)
+    )
+
+    keep = (~leaving).astype(jnp.float32)
+    zi = jnp.zeros_like(state.soc)
+    new_state = replace(
+        state,
+        evse_current=state.evse_current * keep,
+        occupied=state.occupied * keep,
+        soc=state.soc * keep,
+        e_remain=state.e_remain * keep,
+        t_remain=state.t_remain * keep.astype(state.t_remain.dtype),
+        rhat=state.rhat * keep,
+        cap=state.cap * keep,
+        rbar=state.rbar * keep,
+        tau=jnp.where(leaving, zi, state.tau),
+        user_type=state.user_type * keep,
+        missing_kwh_cum=state.missing_kwh_cum + missing,
+        overtime_steps_cum=state.overtime_steps_cum + over,
+    )
+    return DepartResult(new_state, missing, over, early)
+
+
+# ---------------------------------------------------------------------------
+# Stage 4: arrivals
+# ---------------------------------------------------------------------------
+class ArriveResult(NamedTuple):
+    state: EnvState
+    n_arrived: jnp.ndarray  # ()
+    n_rejected: jnp.ndarray  # ()
+
+
+def arrive_cars(params: EnvParams, state: EnvState, key: jax.Array) -> ArriveResult:
+    n = state.occupied.shape[0]
+    k_m, k_model, k_stay, k_soc0, k_tgt, k_u = jax.random.split(key, 6)
+
+    spd = params.arrival_rate.shape[0]
+    rate = params.arrival_rate[jnp.mod(state.t, spd)]
+    m = jax.random.poisson(k_m, rate).astype(jnp.int32)
+
+    free = state.occupied < 0.5
+    n_free = jnp.sum(free.astype(jnp.int32))
+    n_arrive = jnp.minimum(m, n_free)
+    n_reject = jnp.maximum(m - n_free, 0)
+
+    # first-come-first-served: fill free ports in index order
+    rank = jnp.cumsum(free.astype(jnp.int32))  # 1-based among free ports
+    assign = free & (rank <= n_arrive)
+    a = assign.astype(jnp.float32)
+
+    # --- car profiles (one draw per port; only assigned ports consume it) ---
+    model = jax.random.choice(
+        k_model, params.car_probs.shape[0], shape=(n,), p=params.car_probs
+    )
+    cap = params.car_capacity[model]
+    tau = params.car_tau[model]
+    car_kw = jnp.where(
+        params.evse_is_dc > 0.5, params.car_dc_kw[model], params.car_ac_kw[model]
+    )
+    rbar = car_kw * 1000.0 / params.evse_voltage  # car-side current limit [A]
+
+    # --- user profiles -------------------------------------------------------
+    stay_h = jnp.exp(
+        params.stay_mu_log + params.stay_sigma * jax.random.normal(k_stay, (n,))
+    )
+    steps_per_hour = spd / 24.0
+    stay_steps = jnp.maximum((stay_h * steps_per_hour).astype(jnp.int32), 1)
+    soc0 = jnp.clip(
+        jax.random.beta(k_soc0, params.soc0_a, params.soc0_b, (n,)), 0.02, 0.95
+    )
+    target = jnp.clip(
+        params.target_soc_mu + params.target_soc_std * jax.random.normal(k_tgt, (n,)),
+        soc0 + 0.05,
+        1.0,
+    )
+    e_req = (target - soc0) * cap
+    # u: 0 = time-sensitive (leaves at deadline), 1 = charge-sensitive
+    u = 1.0 - jax.random.bernoulli(k_u, params.p_time_sensitive, (n,)).astype(jnp.float32)
+
+    new_state = replace(
+        state,
+        occupied=state.occupied * (1 - a) + a,
+        soc=state.soc * (1 - a) + a * soc0,
+        e_remain=state.e_remain * (1 - a) + a * e_req,
+        t_remain=jnp.where(assign, stay_steps, state.t_remain),
+        rhat=state.rhat * (1 - a) + a * charge_rate(soc0, rbar, tau),
+        cap=state.cap * (1 - a) + a * cap,
+        rbar=state.rbar * (1 - a) + a * rbar,
+        tau=jnp.where(assign, tau, state.tau),
+        user_type=state.user_type * (1 - a) + a * u,
+        cars_served=state.cars_served + n_arrive.astype(jnp.float32),
+        cars_rejected=state.cars_rejected + n_reject.astype(jnp.float32),
+    )
+    return ArriveResult(new_state, n_arrive, n_reject)

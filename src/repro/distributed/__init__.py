@@ -1,0 +1,37 @@
+"""Distribution substrate: sharding rules, train/serve steps, checkpointing,
+gradient compression (DESIGN.md §5)."""
+from repro.distributed.sharding import (
+    DP,
+    batch_spec,
+    cache_shardings,
+    constrain,
+    data_axes,
+    param_shardings,
+    param_spec,
+)
+from repro.distributed.checkpoint import CheckpointManager
+from repro.distributed.train_step import (
+    TrainState,
+    TrainStepConfig,
+    init_train_state,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+)
+
+__all__ = [
+    "DP",
+    "batch_spec",
+    "cache_shardings",
+    "constrain",
+    "data_axes",
+    "param_shardings",
+    "param_spec",
+    "CheckpointManager",
+    "TrainState",
+    "TrainStepConfig",
+    "init_train_state",
+    "make_prefill_step",
+    "make_serve_step",
+    "make_train_step",
+]

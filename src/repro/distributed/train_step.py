@@ -1,0 +1,162 @@
+"""Distributed LM train/serve steps.
+
+``make_train_step`` builds the jittable step used by both the real trainer
+and the AOT dry-run: forward+backward (with per-layer remat via the model's
+scan body), microbatched gradient accumulation (a scan — VMEM-bounding knob
+for the big cells), AdamW with fp32 moments, optional int8 error-feedback
+gradient compression on the cross-pod hop, and donated state.
+
+``make_serve_step`` builds the one-token decode step against a sharded cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import compression
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig, AdamWState, adamw_init, adamw_update, apply_updates
+from repro.utils import pytree_dataclass
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.1
+    max_grad_norm: float = 1.0
+    num_microbatches: int = 1
+    compress_grads: bool = False  # int8 error-feedback on gradients
+    unroll_layers: bool = False  # unroll layer scans (FLOP-probe compiles)
+    remat: bool = True  # per-layer activation checkpointing
+
+
+@pytree_dataclass
+class TrainState:
+    params: Any
+    opt: AdamWState
+    error_feedback: Any  # compression residuals (empty dict if disabled)
+
+
+def init_train_state(model, key: jax.Array, ts_cfg: TrainStepConfig) -> TrainState:
+    params = model.init(key)
+    ef = (
+        jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        if ts_cfg.compress_grads
+        else {}
+    )
+    return TrainState(params=params, opt=adamw_init(params), error_feedback=ef)
+
+
+def make_train_step(model, ts_cfg: TrainStepConfig) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``batch``: dict with tokens (B, L), labels (B, L) [, frames (B, F, d)].
+    """
+    from repro.optim import cosine_warmup_schedule
+
+    cfg: ModelConfig = model.cfg
+    lr_fn = cosine_warmup_schedule(ts_cfg.lr, ts_cfg.warmup_steps, ts_cfg.total_steps)
+    opt_cfg = AdamWConfig(
+        weight_decay=ts_cfg.weight_decay, max_grad_norm=ts_cfg.max_grad_norm
+    )
+
+    def loss_fn(params, batch):
+        if cfg.family == "encdec":
+            return model.loss(
+                params, batch["tokens"], batch["labels"], batch["frames"],
+                remat=ts_cfg.remat, unroll=ts_cfg.unroll_layers,
+            )
+        return model.loss(
+            params, batch["tokens"], batch["labels"],
+            remat=ts_cfg.remat, unroll=ts_cfg.unroll_layers,
+        )
+
+    def compute_grads(params, batch):
+        n = ts_cfg.num_microbatches
+        if n == 1:
+            (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+            return loss, aux, grads
+
+        micro = jax.tree_util.tree_map(
+            lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch
+        )
+
+        def acc_fn(carry, mb):
+            (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+            g_acc, l_acc = carry
+            g_acc = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(jnp.float32) / n, g_acc, grads
+            )
+            return (g_acc, l_acc + loss / n), aux
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        (grads, loss), auxs = jax.lax.scan(acc_fn, (zeros, jnp.float32(0.0)), micro)
+        aux = jax.tree_util.tree_map(lambda a: a[-1], auxs)
+        grads = jax.tree_util.tree_map(lambda g, p: g.astype(p.dtype), grads, params)
+        return loss, aux, grads
+
+    def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        loss, aux, grads = compute_grads(state.params, batch)
+
+        ef = state.error_feedback
+        if ts_cfg.compress_grads:
+            grads, ef = compression.compress_decompress_with_feedback(grads, ef)
+
+        updates, opt, gnorm = adamw_update(grads, state.opt, state.params, lr_fn, opt_cfg)
+        params = apply_updates(state.params, updates)
+        metrics = {
+            "loss": loss,
+            "grad_norm": gnorm,
+            "lr": lr_fn(opt.step),
+            **{k: v for k, v in aux.items()},
+        }
+        return TrainState(params=params, opt=opt, error_feedback=ef), metrics
+
+    return train_step
+
+
+def make_serve_step(model, unroll: bool = False) -> Callable:
+    """Returns serve_step(params, cache, tokens (B,1), pos) ->
+    (next_tokens (B,1), cache) — greedy decode of ONE new token against the
+    existing KV/state cache (the decode_* / long_* dry-run target)."""
+
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = model.decode_step(params, cache, tokens, pos, unroll=unroll)
+        nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return nxt, cache
+
+    return serve_step
+
+
+def make_prefill_step(model, unroll: bool = False) -> Callable:
+    """Full-sequence forward (no bwd) — the prefill_32k dry-run target.
+
+    Returns *last-position* logits (what a serving prefill emits before
+    decode takes over); materialising (B, 32k, V) fp32 logits was the
+    dominant memory term of every prefill cell (§Perf iteration 1)."""
+
+    def prefill(params, batch):
+        if model.cfg.family == "encdec":
+            enc = model.encode(params, batch["frames"], unroll)
+            x = model.decode_hidden(params, batch["tokens"], enc, unroll)
+            w = params["embed"].T
+        else:
+            x, _ = model.apply_hidden(
+                params, batch["tokens"], remat=False, unroll=unroll
+            )
+            w = (
+                params["embed"].T
+                if model.cfg.tied_embeddings
+                else params["unembed"]
+            )
+        last = x[:, -1, :]
+        return (last @ w.astype(last.dtype)).astype(jnp.float32)
+
+    return prefill

@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the framework's compute hot-spots (DESIGN.md §6).
+
+Each kernel package ships kernel.py (pl.pallas_call + BlockSpec), ops.py
+(jit'd dispatch wrapper with custom_vjp) and ref.py (pure-jnp oracle that is
+also the CPU / dry-run execution path).
+"""
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.chargax_step.ops import fused_step as chargax_fused_step
+from repro.kernels.mamba2_ssd.ops import ssd, ssd_decode_step
+from repro.kernels.rwkv6_wkv.ops import wkv, wkv_decode_step
+
+__all__ = [
+    "flash_attention",
+    "chargax_fused_step",
+    "ssd",
+    "ssd_decode_step",
+    "wkv",
+    "wkv_decode_step",
+]

@@ -1,0 +1,136 @@
+"""Fused Chargax station step — Pallas TPU kernel (DESIGN.md §6).
+
+At 10^5-10^6 parallel environments the station transition is the RL
+training-loop inner loop.  This kernel fuses action clipping, the Eq. 5 tree
+constraint, and the charging integration into one VMEM-resident pass:
+
+  grid = (n_envs / B_blk,)            # one grid step per env block
+
+Per block, all pole-state slabs (B_blk, P) live in VMEM; the constraint check
+is a single (B_blk, P) x (P, Nn) MXU matmul followed by a static min-loop over
+the (tiny, padded) node axis; charging is a fused elementwise epilogue.  The
+pole axis P is padded to a lane multiple (128) and the node axis Nn to a
+sublane multiple (8) by ``ops.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.chargax_step.ref import BIG
+
+
+def _chargax_kernel(
+    # dynamic state slabs, all (B_blk, P)
+    target_ref, occupied_ref, soc_ref, e_remain_ref, cap_ref, rbar_ref, tau_ref,
+    # static params
+    voltage_ref,  # (8, P) — row 0 real, sublane-padded
+    imax_ref,  # (8, P)
+    eff_in_ref,  # (8, P)
+    eff_out_ref,  # (8, P)
+    member_t_ref,  # (P, Nn)  — transposed membership for the MXU
+    node_budget_ref,  # (8, Nn)
+    # outputs, (B_blk, P) unless noted
+    current_out, soc_out, e_remain_out, rhat_out, e_pole_out,
+    excess_out,  # (B_blk, 128) lane-replicated scalar
+    *,
+    dt_hours: float,
+    n_nodes: int,
+):
+    v = voltage_ref[0, :]
+    imax = imax_ref[0, :]
+    eff_in = eff_in_ref[0, :]
+    eff_out = eff_out_ref[0, :]
+    budget = node_budget_ref[0, :]
+
+    soc = soc_ref[...]
+    rbar = rbar_ref[...]
+    tau = tau_ref[...]
+    cap = cap_ref[...]
+    e_remain = e_remain_ref[...]
+    occ = occupied_ref[...]
+
+    inv_tau = 1.0 / jnp.maximum(1.0 - tau, 1e-6)
+    rhat_chg = jnp.where(soc <= tau, rbar, rbar * (1.0 - soc) * inv_tau)
+    rhat_dis = jnp.where((1.0 - soc) <= tau, rbar, rbar * soc * inv_tau)
+
+    amp_per_kwh = 1000.0 / jnp.maximum(v * dt_hours, 1e-9)
+    up = jnp.minimum(
+        jnp.minimum(rhat_chg, imax),
+        jnp.minimum(
+            e_remain * amp_per_kwh,
+            (1.0 - soc) * cap * amp_per_kwh / jnp.maximum(eff_in, 1e-9),
+        ),
+    )
+    down = -jnp.minimum(
+        jnp.minimum(rhat_dis, imax),
+        soc * cap * amp_per_kwh / jnp.maximum(eff_out, 1e-9),
+    )
+    i = jnp.clip(target_ref[...], down, jnp.maximum(up, 0.0)) * occ
+
+    # --- Eq. 5: (B, P) @ (P, Nn) on the MXU ---------------------------------
+    load = jax.lax.dot_general(
+        jnp.abs(i), member_t_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (B, Nn)
+    s_node = jnp.minimum(1.0, budget / jnp.maximum(load, 1e-9))
+    excess = jnp.max(jnp.maximum(load - budget, 0.0), axis=-1, keepdims=True)
+
+    scale = jnp.full_like(i, 1.0)
+    for n in range(n_nodes):  # static unroll over the tiny node axis
+        row = member_t_ref[:, n]  # (P,)
+        scale = jnp.minimum(scale, jnp.where(row > 0, s_node[:, n : n + 1], BIG))
+    i = i * scale
+
+    # --- charge epilogue ------------------------------------------------------
+    e = v * i * dt_hours / 1000.0
+    soc_delta = jnp.where(e >= 0, e * eff_in, e * eff_out)
+    soc_new = jnp.clip(soc + soc_delta / jnp.maximum(cap, 1e-6), 0.0, 1.0)
+    e_rem_new = jnp.minimum(jnp.maximum(e_remain - e, 0.0), BIG)
+    rhat_new = jnp.where(soc_new <= tau, rbar, rbar * (1.0 - soc_new) * inv_tau) * occ
+
+    current_out[...] = i
+    soc_out[...] = soc_new
+    e_remain_out[...] = e_rem_new
+    rhat_out[...] = rhat_new
+    e_pole_out[...] = e
+    excess_out[...] = jnp.broadcast_to(excess, excess_out.shape)
+
+
+def chargax_fused_step(
+    slabs_arrays: tuple[jnp.ndarray, ...],  # 7 x (B, P) in PoleSlabs order
+    params_arrays: tuple[jnp.ndarray, ...],  # voltage/imax/eff_in/eff_out (8,P), member_t (P,Nn), budget (8,Nn)
+    *,
+    dt_hours: float,
+    block_envs: int = 256,
+    interpret: bool = False,
+):
+    b, p = slabs_arrays[0].shape
+    member_t = params_arrays[4]
+    nn = member_t.shape[1]
+    assert b % block_envs == 0, (b, block_envs)
+
+    grid = (b // block_envs,)
+    state_spec = pl.BlockSpec((block_envs, p), lambda e: (e, 0))
+    param_spec_row = pl.BlockSpec((8, p), lambda e: (0, 0))
+    kernel = functools.partial(_chargax_kernel, dt_hours=dt_hours, n_nodes=nn)
+    out_shapes = [jax.ShapeDtypeStruct((b, p), jnp.float32) for _ in range(5)]
+    out_shapes.append(jax.ShapeDtypeStruct((b, 128), jnp.float32))
+    out_specs = [state_spec] * 5 + [pl.BlockSpec((block_envs, 128), lambda e: (e, 0))]
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[state_spec] * 7
+        + [param_spec_row] * 4
+        + [
+            pl.BlockSpec((p, nn), lambda e: (0, 0)),
+            pl.BlockSpec((8, nn), lambda e: (0, 0)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(*slabs_arrays, *params_arrays)

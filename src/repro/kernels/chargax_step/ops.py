@@ -1,0 +1,133 @@
+"""Jit'd wrapper for the fused Chargax station step.
+
+Builds padded pole slabs from core env structures, dispatches to the Pallas
+kernel (TPU) or the jnp reference (CPU / other backends), and unpacks results
+back into env-shaped pieces.  The battery is pole index ``n_evse``
+(the paper's (N+1)-th pole).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.state import EnvParams, EnvState
+from repro.kernels.chargax_step import ref
+from repro.kernels.chargax_step.kernel import chargax_fused_step
+from repro.kernels.chargax_step.ref import BIG, FusedOut, PoleParams, PoleSlabs
+
+
+def _pad_lanes(x: np.ndarray | jnp.ndarray, target: int, fill=0.0):
+    pad = target - x.shape[-1]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+def build_pole_params(params: EnvParams, n_pad: int | None = None) -> PoleParams:
+    """Lift EnvParams into lane-padded PoleParams (poles = EVSEs + battery)."""
+    n = params.evse_voltage.shape[0]
+    p = n_pad or ((n + 1 + 127) // 128 * 128)
+
+    voltage = _pad_lanes(jnp.append(params.evse_voltage, params.batt_voltage), p, 1.0)
+    imax = _pad_lanes(jnp.append(params.evse_max_current, params.batt_max_current), p)
+    ones = jnp.ones((n,), jnp.float32)
+    eff_in = _pad_lanes(jnp.append(ones, params.batt_eff), p, 1.0)
+    eff_out = _pad_lanes(
+        jnp.append(ones, 1.0 / jnp.maximum(params.batt_eff, 1e-6)), p, 1.0
+    )
+
+    nn_real, n_leaf = params.member.shape  # member already has the battery col
+    nn = (nn_real + 7) // 8 * 8
+    member = jnp.zeros((nn, p), jnp.float32).at[:nn_real, : n + 1].set(params.member)
+    budget = jnp.full((nn,), BIG, jnp.float32).at[:nn_real].set(params.node_budget)
+    return PoleParams(voltage, imax, eff_in, eff_out, member, budget)
+
+
+def build_slabs(
+    params: EnvParams,
+    state: EnvState,
+    target_evse: jnp.ndarray,
+    target_batt: jnp.ndarray,
+    pp: PoleParams,
+) -> PoleSlabs:
+    """Build (..., P) pole slabs from env state (leading dims = env batch)."""
+    p = pp.voltage.shape[-1]
+
+    def cat(evse_val, batt_scalar, fill=0.0):
+        batt = jnp.broadcast_to(batt_scalar, target_batt.shape)
+        x = jnp.concatenate([evse_val, batt[..., None]], axis=-1)
+        return _pad_lanes(x, p, fill)
+
+    return PoleSlabs(
+        target=cat(target_evse, target_batt * 1.0),
+        occupied=cat(state.occupied, 1.0),
+        soc=cat(state.soc, state.batt_soc),
+        e_remain=cat(state.e_remain, BIG),
+        cap=cat(state.cap, params.batt_capacity),
+        rbar=cat(state.rbar, params.batt_max_current),
+        tau=cat(state.tau, params.batt_tau),
+    )
+
+
+def fused_step(
+    params: EnvParams,
+    state: EnvState,
+    target_evse: jnp.ndarray,  # (..., N)
+    target_batt: jnp.ndarray,  # (...,)
+    dt_hours: float,
+    *,
+    impl: str = "auto",  # auto | pallas | interpret | ref
+    block_envs: int = 256,
+) -> FusedOut:
+    """Stages 1-2 of the transition for a (possibly batched) env state.
+
+    Returns pole-indexed FusedOut; callers slice [..., :N] for EVSEs and
+    [..., N] for the battery.
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    pp = build_pole_params(params)
+    slabs = build_slabs(params, state, target_evse, target_batt, pp)
+
+    if impl == "ref":
+        return ref.fused_step_ref(slabs, pp, dt_hours)
+
+    # pallas path: flatten env batch, pad to block multiple
+    lead = slabs.soc.shape[:-1]
+    p = slabs.soc.shape[-1]
+    b = int(np.prod(lead)) if lead else 1
+    bp = (b + block_envs - 1) // block_envs * block_envs
+
+    def flat(x):
+        x = x.reshape(b, p)
+        return jnp.pad(x, ((0, bp - b), (0, 0)))
+
+    slab_arrays = tuple(flat(x) for x in slabs)
+    nn = pp.member.shape[0]
+
+    def sub(x):  # params rows padded to 8 sublanes
+        return jnp.broadcast_to(x, (8,) + x.shape)
+
+    param_arrays = (
+        sub(pp.voltage), sub(pp.imax), sub(pp.eff_in), sub(pp.eff_out),
+        pp.member.T, sub(pp.node_budget),
+    )
+    outs = chargax_fused_step(
+        slab_arrays,
+        param_arrays,
+        dt_hours=dt_hours,
+        block_envs=block_envs,
+        interpret=(impl == "interpret"),
+    )
+    current, soc, e_remain, rhat, e_pole, excess = outs
+    shape = lead + (p,)
+    return FusedOut(
+        current=current[:b].reshape(shape),
+        soc=soc[:b].reshape(shape),
+        e_remain=e_remain[:b].reshape(shape),
+        rhat=rhat[:b].reshape(shape),
+        e_pole=e_pole[:b].reshape(shape),
+        excess=excess[:b, 0].reshape(lead),
+    )

@@ -1,0 +1,96 @@
+"""Pure-jnp oracle for the fused Chargax station step (stages 1-2 of App. A.2).
+
+Operates on a *unified pole representation*: the station battery is pole
+index ``n_evse`` (the paper's "(N+1)-th charging pole"), with per-pole
+asymmetric SoC-efficiency vectors:
+
+    cars:    eff_in = eff_out = 1          (port losses live in path_eff)
+    battery: eff_in = eta_b, eff_out = 1/eta_b
+
+so one elementwise pipeline serves every pole.  ``poles_from_env`` builds the
+padded slabs from core env structures; ``fused_step_ref`` is the oracle the
+Pallas kernel must match bit-for-bit (same op order, fp32).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+BIG = 1e30
+
+
+class PoleSlabs(NamedTuple):
+    """Per-pole dynamic state, all (..., P) float32 (P = padded poles)."""
+
+    target: jnp.ndarray  # requested current [A], signed
+    occupied: jnp.ndarray
+    soc: jnp.ndarray
+    e_remain: jnp.ndarray  # kWh (BIG for the battery)
+    cap: jnp.ndarray  # kWh
+    rbar: jnp.ndarray  # max current [A]
+    tau: jnp.ndarray
+
+
+class PoleParams(NamedTuple):
+    """Static per-pole / per-node parameters (P-padded, node-padded)."""
+
+    voltage: jnp.ndarray  # (P,)
+    imax: jnp.ndarray  # (P,)
+    eff_in: jnp.ndarray  # (P,)
+    eff_out: jnp.ndarray  # (P,)
+    member: jnp.ndarray  # (Nn, P) 0/1
+    node_budget: jnp.ndarray  # (Nn,)  BIG on padding rows
+
+
+class FusedOut(NamedTuple):
+    current: jnp.ndarray  # (..., P) post-constraint amps
+    soc: jnp.ndarray
+    e_remain: jnp.ndarray
+    rhat: jnp.ndarray
+    e_pole: jnp.ndarray  # (..., P) kWh delivered (signed, pole-side)
+    excess: jnp.ndarray  # (...,) max node violation pre-rescale [A]
+
+
+def charge_rate(soc, rbar, tau):
+    return jnp.where(soc <= tau, rbar, rbar * (1.0 - soc) / jnp.maximum(1.0 - tau, 1e-6))
+
+
+def fused_step_ref(slabs: PoleSlabs, pp: PoleParams, dt_hours: float) -> FusedOut:
+    v = pp.voltage
+    amp_per_kwh = 1000.0 / jnp.maximum(v * dt_hours, 1e-9)  # (P,)
+
+    rhat_chg = charge_rate(slabs.soc, slabs.rbar, slabs.tau)
+    rhat_dis = charge_rate(1.0 - slabs.soc, slabs.rbar, slabs.tau)
+
+    up = jnp.minimum(
+        jnp.minimum(rhat_chg, pp.imax),
+        jnp.minimum(
+            slabs.e_remain * amp_per_kwh,
+            (1.0 - slabs.soc) * slabs.cap * amp_per_kwh / jnp.maximum(pp.eff_in, 1e-9),
+        ),
+    )
+    down = -jnp.minimum(
+        jnp.minimum(rhat_dis, pp.imax),
+        slabs.soc * slabs.cap * amp_per_kwh / jnp.maximum(pp.eff_out, 1e-9),
+    )
+    i = jnp.clip(slabs.target, down, jnp.maximum(up, 0.0)) * slabs.occupied
+
+    # --- Eq. 5 tree constraints --------------------------------------------
+    load = jnp.abs(i) @ pp.member.T  # (..., Nn)
+    s_node = jnp.minimum(1.0, pp.node_budget / jnp.maximum(load, 1e-9))
+    excess = jnp.max(jnp.maximum(load - pp.node_budget, 0.0), axis=-1)
+    scale = jnp.full_like(i, 1.0)
+    for n in range(pp.member.shape[0]):  # static, tiny node count
+        scale = jnp.minimum(
+            scale, jnp.where(pp.member[n] > 0, s_node[..., n : n + 1], BIG)
+        )
+    i = i * scale
+
+    # --- charge over dt ------------------------------------------------------
+    e = v * i * dt_hours / 1000.0  # kWh, pole-side
+    soc_delta = jnp.where(e >= 0, e * pp.eff_in, e * pp.eff_out)
+    soc = jnp.clip(slabs.soc + soc_delta / jnp.maximum(slabs.cap, 1e-6), 0.0, 1.0)
+    e_remain = jnp.minimum(jnp.maximum(slabs.e_remain - e, 0.0), BIG)
+    rhat = charge_rate(soc, slabs.rbar, slabs.tau) * slabs.occupied
+    return FusedOut(i, soc, e_remain, rhat, e, excess)

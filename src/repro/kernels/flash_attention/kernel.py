@@ -1,0 +1,153 @@
+"""Flash attention forward — Pallas TPU kernel.
+
+Two-loop online-softmax attention blocked for VMEM/MXU (DESIGN.md §6):
+
+  grid = (batch, q_heads, Lq/Bq, Lk/Bk)     # last axis sequential on TPU
+
+Running max/denominator/accumulator live in VMEM scratch carried across the
+kv-block axis.  Causal and sliding-window geometry prunes fully-masked kv
+blocks with ``pl.when`` (no MXU work issued).  GQA folds G query heads onto
+each kv head via the kv index_map.  Optional logit soft-capping (gemma2).
+
+MXU alignment: Bq/Bk default 128; head_dim padded to a multiple of 128 by the
+``ops.py`` wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(
+    q_ref,  # (Bq, D)
+    k_ref,  # (Bk, D)
+    v_ref,  # (Bk, D)
+    o_ref,  # (Bq, D)
+    m_ref,  # scratch (Bq, 128) running max (lane-replicated)
+    l_ref,  # scratch (Bq, 128) running denom
+    acc_ref,  # scratch (Bq, D) running numerator
+    *,
+    scale: float,
+    causal: bool,
+    window: int | None,
+    softcap: float | None,
+    q_offset: int,
+    block_q: int,
+    block_k: int,
+    kv_valid: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # --- block-level geometry: is any (row, col) pair in this tile live? ---
+    row_min = iq * block_q + q_offset
+    row_max = row_min + block_q - 1
+    col_min = ik * block_k
+    col_max = col_min + block_k - 1
+    live = col_min <= jnp.minimum(row_max, kv_valid - 1) if causal else col_min < kv_valid
+    if window is not None:
+        live = jnp.logical_and(live, col_max > row_min - window)
+
+    @pl.when(live)
+    def _update():
+        q = q_ref[...].astype(jnp.float32)
+        k = k_ref[...].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (Bq, Bk)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+
+        rows = row_min + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        cols = col_min + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = cols < kv_valid
+        if causal:
+            mask = jnp.logical_and(mask, cols <= rows)
+        if window is not None:
+            mask = jnp.logical_and(mask, cols > rows - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, :1]  # (Bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)  # (Bq, 1)
+        p = jnp.exp(s - m_new)  # (Bq, Bk); masked entries exp(-inf)=0
+        l_new = l_ref[:, :1] * alpha + jnp.sum(p, axis=1, keepdims=True)
+
+        pv = jax.lax.dot_general(
+            p, v_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ik == pl.num_programs(3) - 1)
+    def _finalize():
+        l = l_ref[:, :1]
+        o_ref[...] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(
+    q: jnp.ndarray,  # (B, Hq, Lq, D) — D multiple of 128, Lq/Lk multiples of blocks
+    k: jnp.ndarray,  # (B, Hkv, Lk, D)
+    v: jnp.ndarray,
+    *,
+    scale: float,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    q_offset: int = 0,
+    kv_valid: int | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, hq, lq, d = q.shape
+    _, hkv, lk, _ = k.shape
+    assert lq % block_q == 0 and lk % block_k == 0, (lq, lk, block_q, block_k)
+    assert hq % hkv == 0
+    g = hq // hkv
+    kv_valid = lk if kv_valid is None else kv_valid
+
+    grid = (b, hq, lq // block_q, lk // block_k)
+    kernel = functools.partial(
+        _fa_kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+        q_offset=q_offset,
+        block_q=block_q,
+        block_k=block_k,
+        kv_valid=kv_valid,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, block_q, d), lambda b_, h, iq, ik: (b_, h, iq, 0)),
+            pl.BlockSpec((None, None, block_k, d), lambda b_, h, iq, ik: (b_, h // g, ik, 0)),
+            pl.BlockSpec((None, None, block_k, d), lambda b_, h, iq, ik: (b_, h // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, block_q, d), lambda b_, h, iq, ik: (b_, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, lq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

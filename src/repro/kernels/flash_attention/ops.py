@@ -1,0 +1,128 @@
+"""Jit'd public wrapper for flash attention.
+
+``impl='auto'`` picks the Pallas kernel on TPU backends and the jnp reference
+everywhere else (CPU tests / 512-device dry-run compiles), padding shapes to
+kernel alignment as needed.  Gradients always flow: a ``custom_vjp`` routes
+the backward pass through the reference implementation (recompute), which is
+exact; a dedicated backward kernel is a TPU-only optimisation the ref bwd
+stands in for off-TPU (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import ref
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> tuple[jnp.ndarray, int]:
+    size = x.shape[axis]
+    target = (size + mult - 1) // mult * mult
+    if target == size:
+        return x, size
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, target - size)
+    return jnp.pad(x, pad), size
+
+
+def _pallas_path(q, k, v, *, causal, window, softcap, scale, q_offset, block_q, block_k, interpret):
+    lq, lk = q.shape[2], k.shape[2]
+    off = lk - lq if q_offset is None else q_offset
+    qp, _ = _pad_to(q, 2, block_q)
+    kp, _ = _pad_to(k, 2, block_k)
+    vp, _ = _pad_to(v, 2, block_k)
+    qp, d0 = _pad_to(qp, 3, 128)
+    kp, _ = _pad_to(kp, 3, 128)
+    vp, _ = _pad_to(vp, 3, 128)
+    out = flash_attention_fwd(
+        qp, kp, vp,
+        scale=scale,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+        q_offset=off,
+        kv_valid=lk,
+        block_q=block_q,
+        block_k=block_k,
+        interpret=interpret,
+    )
+    return out[:, :, :lq, :d0]
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9, 10)
+)
+def _flash_attention(
+    q, k, v, causal, window, softcap, scale, q_offset, block_q, block_k, use_pallas
+):
+    if use_pallas == "pallas":
+        return _pallas_path(
+            q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
+            q_offset=q_offset, block_q=block_q, block_k=block_k, interpret=False,
+        )
+    if use_pallas == "interpret":
+        return _pallas_path(
+            q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
+            q_offset=q_offset, block_q=block_q, block_k=block_k, interpret=True,
+        )
+    if use_pallas == "naive":
+        return ref.mha_reference(
+            q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
+            q_offset=q_offset,
+        )
+    # "ref": blocked online-softmax jnp — the memory-bounded off-TPU path
+    return ref.mha_blocked_jnp(
+        q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
+        q_offset=q_offset, block_k=block_k,
+    )
+
+
+def _fwd(q, k, v, causal, window, softcap, scale, q_offset, block_q, block_k, use_pallas):
+    out = _flash_attention(
+        q, k, v, causal, window, softcap, scale, q_offset, block_q, block_k, use_pallas
+    )
+    return out, (q, k, v)
+
+
+def _bwd(causal, window, softcap, scale, q_offset, block_q, block_k, use_pallas, res, g):
+    q, k, v = res
+
+    def f(q, k, v):
+        return ref.mha_blocked_jnp(
+            q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
+            q_offset=q_offset, block_k=block_k,
+        )
+
+    _, vjp = jax.vjp(f, q, k, v)
+    return vjp(g)
+
+
+_flash_attention.defvjp(_fwd, _bwd)
+
+
+def flash_attention(
+    q: jnp.ndarray,  # (B, Hq, Lq, D)
+    k: jnp.ndarray,  # (B, Hkv, Lk, D)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    scale: float | None = None,
+    q_offset: int | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    impl: str = "auto",  # auto | pallas | interpret | ref (blocked jnp) | naive
+) -> jnp.ndarray:
+    """IO-aware attention; see module docstring for dispatch semantics."""
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    return _flash_attention(
+        q, k, v, causal, window, softcap, scale, q_offset, block_q, block_k, impl
+    )

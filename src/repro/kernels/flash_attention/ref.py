@@ -1,0 +1,147 @@
+"""Pure-jnp oracle for flash attention (also the CPU/dry-run execution path).
+
+Supports GQA (Hq = G * Hkv), causal masking with query offset (decode /
+chunked prefill alignment), sliding-window attention and logit soft-capping
+(gemma2).  All reductions in fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_mask(
+    q_len: int,
+    kv_len: int,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int | None = None,
+) -> jnp.ndarray:
+    """(q_len, kv_len) boolean mask; True = attend.
+
+    ``q_offset`` is the global position of query row 0 within the kv axis;
+    defaults to kv_len - q_len (queries at the end — decode alignment).
+    """
+    off = kv_len - q_len if q_offset is None else q_offset
+    rows = jnp.arange(q_len)[:, None] + off
+    cols = jnp.arange(kv_len)[None, :]
+    mask = jnp.ones((q_len, kv_len), bool)
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    return mask
+
+
+def mha_reference(
+    q: jnp.ndarray,  # (B, Hq, Lq, D)
+    k: jnp.ndarray,  # (B, Hkv, Lk, D)
+    v: jnp.ndarray,  # (B, Hkv, Lk, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    scale: float | None = None,
+    q_offset: int | None = None,
+    kv_valid_len: jnp.ndarray | None = None,  # () int — mask cols >= this
+) -> jnp.ndarray:
+    b, hq, lq, d = q.shape
+    _, hkv, lk, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    scale = (d**-0.5) if scale is None else scale
+
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, lq, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    mask = attention_mask(lq, lk, causal=causal, window=window, q_offset=q_offset)
+    if kv_valid_len is not None:
+        mask = mask & (jnp.arange(lk)[None, :] < kv_valid_len)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return o.reshape(b, hq, lq, d).astype(q.dtype)
+
+
+def mha_blocked_jnp(
+    q: jnp.ndarray,  # (B, Hq, Lq, D)
+    k: jnp.ndarray,  # (B, Hkv, Lk, D)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    scale: float | None = None,
+    q_offset: int | None = None,
+    block_k: int = 1024,
+) -> jnp.ndarray:
+    """Online-softmax blocked attention in pure jnp — the flash algorithm as
+    a lax.scan over kv blocks.
+
+    This is the *execution* path off-TPU (models, dry-run compiles): it never
+    materialises the (Lq, Lk) score matrix, so the compiled memory footprint
+    matches what the Pallas kernel achieves on TPU (the naive
+    ``mha_reference`` above stays as the test oracle).  Differentiable; the
+    body is checkpointed so the backward recomputes blocks.
+    """
+    from repro.utils import unroll_scans_enabled
+
+    b, hq, lq, d = q.shape
+    _, hkv, lk, _ = k.shape
+    assert hq % hkv == 0
+    g = hq // hkv
+    scale = (d**-0.5) if scale is None else scale
+    off = lk - lq if q_offset is None else q_offset
+
+    pad = (-lk) % block_k
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nk = k.shape[2] // block_k
+
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, lq, d)
+    kb = jnp.moveaxis(k.astype(jnp.float32).reshape(b, hkv, nk, block_k, d), 2, 0)
+    vb = jnp.moveaxis(v.astype(jnp.float32).reshape(b, hkv, nk, block_k, d), 2, 0)
+
+    rows = (jnp.arange(lq) + off)[:, None]  # (Lq, 1)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        m_prev, l_prev, acc = carry
+        kc, vc, ik = inp
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kc) * scale  # (B,Hkv,G,Lq,Bk)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        cols = ik * block_k + jnp.arange(block_k)[None, :]
+        mask = cols < lk
+        if causal:
+            mask = mask & (cols <= rows)
+        if window is not None:
+            mask = mask & (cols > rows - window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_prev * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhgqk,bhkd->bhgqd", p, vc)
+        return (m_new, l_new, acc), None
+
+    init = (
+        jnp.full((b, hkv, g, lq), NEG_INF, jnp.float32),
+        jnp.zeros((b, hkv, g, lq), jnp.float32),
+        jnp.zeros((b, hkv, g, lq, d), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(
+        body, init, (kb, vb, jnp.arange(nk)), unroll=unroll_scans_enabled()
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, hq, lq, d).astype(q.dtype)

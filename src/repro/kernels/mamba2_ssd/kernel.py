@@ -1,0 +1,113 @@
+"""Mamba2 SSD — Pallas TPU kernel (chunk-dual form, DESIGN.md §6).
+
+    grid = (B * H, L / Q)          # chunk axis sequential on TPU
+
+Per grid step one (Q)-token chunk of one (batch, head) pair is processed:
+intra-chunk work is two MXU matmuls — (Q,N)x(N,Q) score matrix and a masked
+(Q,Q)x(Q,P) weighted sum — and the running state (N, P) is carried in VMEM
+scratch across the chunk axis (inter-chunk recurrence), avoiding any HBM
+round-trip for the state.
+
+Inputs are pre-arranged by ``ops.py`` as (B*H, L, ...) slabs with dt folded
+into x (``xdt = x * dt``) and log-decays precomputed (``loga = dt * A_h``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    xdt_ref,  # (Q, P)
+    loga_ref,  # (Q, 128) lane-replicated log decay
+    b_ref,  # (Q, N)
+    c_ref,  # (Q, N)
+    y_ref,  # out (Q, P)
+    s_out_ref,  # out (N, P) final state (written every chunk; last wins)
+    s_ref,  # scratch (N, P) carried state
+    *,
+    chunk: int,
+):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    xdt = xdt_ref[...].astype(jnp.float32)
+    loga = loga_ref[:, 0]  # (Q,)
+    b = b_ref[...].astype(jnp.float32)
+    c = c_ref[...].astype(jnp.float32)
+
+    cum = jnp.cumsum(loga)  # (Q,) inclusive
+    total = cum[chunk - 1]
+
+    # intra-chunk: (C B^T) ⊙ tril(exp(cum_i - cum_j)) @ xdt
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    diff = cum[:, None] - cum[None, :]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.exp(jnp.where(cols <= rows, diff, -1e30))
+    y_intra = jax.lax.dot_general(
+        cb * decay, xdt, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    # inter-chunk: exp(cum_i) * C_i @ S_prev
+    s_prev = s_ref[...]
+    y_inter = jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        c, s_prev, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    y_ref[...] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update: S = exp(total) S_prev + sum_j exp(total - cum_j) B_j ⊗ xdt_j
+    wb = b * jnp.exp(total - cum)[:, None]  # (Q, N)
+    s_new = jnp.exp(total) * s_prev + jax.lax.dot_general(
+        wb, xdt, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    s_ref[...] = s_new
+
+    @pl.when(ci == pl.num_programs(1) - 1)
+    def _emit_state():
+        s_out_ref[...] = s_new
+
+
+def ssd_fwd(
+    xdt: jnp.ndarray,  # (BH, L, P)
+    loga: jnp.ndarray,  # (BH, L, 128) lane-replicated
+    b_mat: jnp.ndarray,  # (BH, L, N)
+    c_mat: jnp.ndarray,  # (BH, L, N)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    bh, l, p = xdt.shape
+    n = b_mat.shape[-1]
+    assert l % chunk == 0
+
+    grid = (bh, l // chunk)
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    y, s_fin = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, chunk, p), lambda g, c_: (g, c_, 0)),
+            pl.BlockSpec((None, chunk, 128), lambda g, c_: (g, c_, 0)),
+            pl.BlockSpec((None, chunk, n), lambda g, c_: (g, c_, 0)),
+            pl.BlockSpec((None, chunk, n), lambda g, c_: (g, c_, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, chunk, p), lambda g, c_: (g, c_, 0)),
+            pl.BlockSpec((None, n, p), lambda g, c_: (g, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, l, p), xdt.dtype),
+            jax.ShapeDtypeStruct((bh, n, p), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(xdt, loga, b_mat, c_mat)
+    return y, s_fin

@@ -1,0 +1,92 @@
+"""Jit'd wrapper for the Mamba2 SSD core.
+
+Dispatch: Pallas kernel on TPU, chunked-jnp dual form elsewhere (both match
+the sequential-scan oracle).  Gradients flow through a custom_vjp whose
+backward recomputes via the chunked-jnp form.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mamba2_ssd import ref
+from repro.kernels.mamba2_ssd.kernel import ssd_fwd
+
+
+def _pallas_path(x, dt, a, b_mat, c_mat, chunk, interpret):
+    bsz, l, h, p = x.shape
+    n = b_mat.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    xdt = (xf * dtf[..., None]).transpose(0, 2, 1, 3).reshape(bsz * h, l, p)
+    loga = (dtf * a.astype(jnp.float32)).transpose(0, 2, 1)  # (B,H,L)
+    loga = jnp.broadcast_to(loga.reshape(bsz * h, l, 1), (bsz * h, l, 128))
+    bb = jnp.broadcast_to(
+        b_mat.astype(jnp.float32)[:, None], (bsz, h, l, n)
+    ).reshape(bsz * h, l, n)
+    cc = jnp.broadcast_to(
+        c_mat.astype(jnp.float32)[:, None], (bsz, h, l, n)
+    ).reshape(bsz * h, l, n)
+
+    y, s_fin = ssd_fwd(xdt, loga, bb, cc, chunk=chunk, interpret=interpret)
+    y = y.reshape(bsz, h, l, p).transpose(0, 2, 1, 3).astype(x.dtype)
+    return y, s_fin.reshape(bsz, h, n, p)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _ssd(x, dt, a, b_mat, c_mat, chunk, impl):
+    if impl == "pallas":
+        return _pallas_path(x, dt, a, b_mat, c_mat, chunk, interpret=False)
+    if impl == "interpret":
+        return _pallas_path(x, dt, a, b_mat, c_mat, chunk, interpret=True)
+    return ref.ssd_chunked_jnp(x, dt, a, b_mat, c_mat, chunk=chunk)
+
+
+def _fwd(x, dt, a, b_mat, c_mat, chunk, impl):
+    out = _ssd(x, dt, a, b_mat, c_mat, chunk, impl)
+    return out, (x, dt, a, b_mat, c_mat)
+
+
+def _bwd(chunk, impl, res, g):
+    x, dt, a, b_mat, c_mat = res
+
+    def f(x, dt, a, b_mat, c_mat):
+        return ref.ssd_chunked_jnp(x, dt, a, b_mat, c_mat, chunk=chunk)
+
+    _, vjp = jax.vjp(f, x, dt, a, b_mat, c_mat)
+    return vjp(g)
+
+
+_ssd.defvjp(_fwd, _bwd)
+
+
+def ssd(
+    x: jnp.ndarray,  # (B, L, H, P)
+    dt: jnp.ndarray,  # (B, L, H), positive
+    a: jnp.ndarray,  # (H,), negative
+    b_mat: jnp.ndarray,  # (B, L, N)
+    c_mat: jnp.ndarray,  # (B, L, N)
+    *,
+    chunk: int = 128,
+    impl: str = "auto",  # auto | pallas | interpret | ref
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Mamba2 SSD core: returns (y (B,L,H,P), final_state (B,H,N,P))."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    l = x.shape[1]
+    chunk = min(chunk, l)
+    pad = (-l) % chunk
+    if pad:
+        # identity padding: dt=0 -> decay=1, contribution=0
+        padlen = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        y, s_fin = _ssd(
+            padlen(x), padlen(dt), a, padlen(b_mat), padlen(c_mat), chunk, impl
+        )
+        return y[:, :l], s_fin
+    return _ssd(x, dt, a, b_mat, c_mat, chunk, impl)
+
+
+ssd_decode_step = ref.ssd_decode_step

@@ -1,0 +1,144 @@
+"""Oracles for the Mamba2 SSD (state-space dual) layer core.
+
+Semantics (per batch b, head h; state S in R^{N x P}):
+
+    a_t = exp(dt_t * A_h)                       # A_h < 0
+    S_t = a_t * S_{t-1} + dt_t * B_t (outer) x_t
+    y_t = C_t @ S_t  (+ D_h * x_t added by the caller)
+
+Two references:
+  * ``ssd_scan_ref``    — sequential lax.scan; the ground-truth oracle.
+  * ``ssd_chunked_jnp`` — chunk-parallel dual form (matmul-rich); the
+                          execution path models use off-TPU, and the exact
+                          math the Pallas kernel implements.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(
+    x: jnp.ndarray,  # (B, L, H, P)
+    dt: jnp.ndarray,  # (B, L, H)
+    a: jnp.ndarray,  # (H,) negative
+    b_mat: jnp.ndarray,  # (B, L, N)  (single B/C group broadcast over heads)
+    c_mat: jnp.ndarray,  # (B, L, N)
+    s0: jnp.ndarray | None = None,  # (B, H, N, P)
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y (B,L,H,P), final_state (B,H,N,P))."""
+    bsz, l, h, p = x.shape
+    n = b_mat.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    bf = b_mat.astype(jnp.float32)
+    cf = c_mat.astype(jnp.float32)
+
+    def per_bh(xh, dth, ah, bb, cc, s_init):
+        # xh (L, P), dth (L,), bb/cc (L, N)
+        def step(s, inp):
+            xt, dtt, bt, ct = inp
+            decay = jnp.exp(dtt * ah)
+            s = decay * s + dtt * (bt[:, None] * xt[None, :])  # (N, P)
+            y = ct @ s  # (P,)
+            return s, y
+
+        s_fin, ys = jax.lax.scan(step, s_init, (xh, dth, bb, cc))
+        return ys, s_fin
+
+    if s0 is None:
+        s0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+
+    # vmap over batch then heads (B/C shared across heads)
+    f = jax.vmap(  # batch
+        jax.vmap(per_bh, in_axes=(1, 1, 0, None, None, 0), out_axes=(1, 0)),
+        in_axes=(0, 0, None, 0, 0, 0),
+        out_axes=(0, 0),
+    )
+    y, s_fin = f(xf, dtf, a.astype(jnp.float32), bf, cf, s0)
+    return y.astype(x.dtype), s_fin
+
+
+def _segsum_chunk(loga: jnp.ndarray) -> jnp.ndarray:
+    """(..., Q) log decays -> local inclusive cumsum (..., Q)."""
+    return jnp.cumsum(loga, axis=-1)
+
+
+def ssd_chunked_jnp(
+    x: jnp.ndarray,  # (B, L, H, P)
+    dt: jnp.ndarray,  # (B, L, H)
+    a: jnp.ndarray,  # (H,)
+    b_mat: jnp.ndarray,  # (B, L, N)
+    c_mat: jnp.ndarray,  # (B, L, N)
+    chunk: int = 128,
+    s0: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunk-dual SSD as a scan over chunks; semantics == ``ssd_scan_ref``.
+
+    Scanning (instead of computing every chunk's (Q,Q,H) decay tensor at
+    once) bounds the live intermediates to ONE chunk — this was the dominant
+    memory term of the zamba2 train cells (§Perf iteration 1).  The body is
+    checkpointed so the backward pass recomputes rather than stores them.
+    """
+    from repro.utils import unroll_scans_enabled
+
+    bsz, l, h, p = x.shape
+    n = b_mat.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    af = a.astype(jnp.float32)
+
+    cs = lambda t: jnp.moveaxis(
+        t.reshape(bsz, nc, chunk, *t.shape[2:]), 1, 0
+    )  # (NC, B, Q, ...)
+    xf = cs(x.astype(jnp.float32))
+    dtf = cs(dt.astype(jnp.float32))
+    bf = cs(b_mat.astype(jnp.float32))
+    cf = cs(c_mat.astype(jnp.float32))
+
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    if s0 is None:
+        s0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+
+    @jax.checkpoint
+    def body(s, inp):
+        xc, dtc, bc, cc = inp  # (B,Q,H,P), (B,Q,H), (B,Q,N), (B,Q,N)
+        loga = dtc * af
+        cum = jnp.cumsum(loga, axis=1)  # (B,Q,H) inclusive
+        total = cum[:, -1]  # (B,H)
+        cb = jnp.einsum("bin,bjn->bij", cc, bc)
+        diff = cum[:, :, None, :] - cum[:, None, :, :]  # (B,Q,Q,H)
+        # clamp inside exp: masked (j>i) diffs are positive -> would overflow
+        # and poison the vjp (NaN = 0 * inf)
+        decay = jnp.exp(jnp.where(mask[None, :, :, None], diff, -1e30))
+        xdt = xc * dtc[..., None]
+        y = jnp.einsum("bij,bijh,bjhp->bihp", cb, decay, xdt)
+        y += jnp.einsum("bin,bih,bhnp->bihp", cc, jnp.exp(cum), s)
+        w = jnp.exp(total[:, None] - cum)  # (B,Q,H)
+        s_new = s * jnp.exp(total)[..., None, None] + jnp.einsum(
+            "bjn,bjh,bjhp->bhnp", bc, w, xdt
+        )
+        return s_new, y
+
+    s_fin, ys = jax.lax.scan(
+        body, s0, (xf, dtf, bf, cf), unroll=unroll_scans_enabled()
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, l, h, p)
+    return y.astype(x.dtype), s_fin
+
+
+def ssd_decode_step(
+    x: jnp.ndarray,  # (B, H, P) one token
+    dt: jnp.ndarray,  # (B, H)
+    a: jnp.ndarray,  # (H,)
+    b_t: jnp.ndarray,  # (B, N)
+    c_t: jnp.ndarray,  # (B, N)
+    s: jnp.ndarray,  # (B, H, N, P) carried state
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """O(1) recurrent decode update (the long_500k serving path)."""
+    decay = jnp.exp(dt.astype(jnp.float32) * a)  # (B, H)
+    s_new = s * decay[..., None, None] + jnp.einsum(
+        "bn,bh,bhp->bhnp", b_t.astype(jnp.float32), dt.astype(jnp.float32), x.astype(jnp.float32)
+    )
+    y = jnp.einsum("bn,bhnp->bhp", c_t.astype(jnp.float32), s_new)
+    return y.astype(x.dtype), s_new

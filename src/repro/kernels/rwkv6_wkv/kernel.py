@@ -1,0 +1,120 @@
+"""RWKV6 WKV — Pallas TPU kernel (chunked, per-channel data-dependent decay).
+
+    grid = (B * H, L / Q)          # chunk axis sequential
+
+The (K, V) state is carried in VMEM scratch.  Unlike SSD, the decay is
+per-*channel*, so the intra-chunk pair weights form a (Q, Q, K) tensor; with
+Q = K = 64 this is a 1 MB VMEM intermediate — deliberate: it keeps every
+exponent a difference of cumulative log decays with j <= i-1 (<= 0, overflow-
+free), instead of the unstable exp(+cum) trick used by matmul-only chunked
+GLA formulations.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(
+    r_ref,  # (Q, K)
+    k_ref,  # (Q, K)
+    v_ref,  # (Q, V)
+    lw_ref,  # (Q, K) log decay
+    u_ref,  # (8, K) bonus, row 0 real
+    y_ref,  # out (Q, V)
+    s_out_ref,  # out (K, V)
+    s_ref,  # scratch (K, V)
+    *,
+    chunk: int,
+):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    lw = lw_ref[...].astype(jnp.float32)
+    u = u_ref[0, :]
+
+    cw = jnp.cumsum(lw, axis=0)  # (Q, K) inclusive
+    cw_shift = cw - lw  # exclusive
+    total = cw[chunk - 1]  # (K,)
+
+    # intra-chunk: (Q, Q, K) pair decays, strictly-lower-triangular mask
+    rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    diff = cw_shift[:, None, :] - cw[None, :, :]
+    decay = jnp.exp(jnp.where((cols < rows)[:, :, None], diff, -1e30))
+    score = jnp.sum(r[:, None, :] * k[None, :, :] * decay, axis=-1)  # (Q, Q)
+    y = jax.lax.dot_general(
+        score, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    coeff = jnp.sum(r * u[None, :] * k, axis=-1, keepdims=True)  # (Q, 1)
+    y += coeff * v
+
+    # inter-chunk
+    s_prev = s_ref[...]
+    y += jax.lax.dot_general(
+        r * jnp.exp(cw_shift), s_prev, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    y_ref[...] = y.astype(y_ref.dtype)
+
+    # state update
+    wk = k * jnp.exp(total[None, :] - cw)  # (Q, K)
+    s_new = jnp.exp(total)[:, None] * s_prev + jax.lax.dot_general(
+        wk, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    s_ref[...] = s_new
+
+    @pl.when(ci == pl.num_programs(1) - 1)
+    def _emit():
+        s_out_ref[...] = s_new
+
+
+def wkv_fwd(
+    r: jnp.ndarray,  # (BH, L, K)
+    k: jnp.ndarray,
+    v: jnp.ndarray,  # (BH, L, V)
+    lw: jnp.ndarray,  # (BH, L, K)
+    u: jnp.ndarray,  # (BH, 8, K) per-(batch,head) bonus rows
+    *,
+    chunk: int = 64,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    bh, l, kd = r.shape
+    vd = v.shape[-1]
+    assert l % chunk == 0
+
+    grid = (bh, l // chunk)
+    kernel = functools.partial(_wkv_kernel, chunk=chunk)
+    seq_spec = lambda d: pl.BlockSpec((None, chunk, d), lambda g, c: (g, c, 0))
+    y, s_fin = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            seq_spec(kd),
+            seq_spec(kd),
+            seq_spec(vd),
+            seq_spec(kd),
+            pl.BlockSpec((None, 8, kd), lambda g, c: (g, 0, 0)),
+        ],
+        out_specs=[
+            seq_spec(vd),
+            pl.BlockSpec((None, kd, vd), lambda g, c: (g, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, l, vd), r.dtype),
+            jax.ShapeDtypeStruct((bh, kd, vd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((kd, vd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, lw, u)
+    return y, s_fin

@@ -1,0 +1,81 @@
+"""Jit'd wrapper for the RWKV6 WKV core (dispatch + custom_vjp, as flash/ssd)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6_wkv import ref
+from repro.kernels.rwkv6_wkv.kernel import wkv_fwd
+
+
+def _pallas_path(r, k, v, w, u, chunk, interpret):
+    bsz, l, h, kd = r.shape
+    vd = v.shape[-1]
+    fold = lambda x: x.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(bsz * h, l, -1)
+    lw = jnp.log(jnp.clip(w.astype(jnp.float32), 1e-20, 1.0))
+    u_rows = jnp.broadcast_to(
+        u.astype(jnp.float32)[None, :, None, :], (bsz, h, 8, kd)
+    ).reshape(bsz * h, 8, kd)
+    y, s_fin = wkv_fwd(
+        fold(r), fold(k), fold(v), fold(lw), u_rows, chunk=chunk, interpret=interpret
+    )
+    y = y.reshape(bsz, h, l, vd).transpose(0, 2, 1, 3).astype(r.dtype)
+    return y, s_fin.reshape(bsz, h, kd, vd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _wkv(r, k, v, w, u, chunk, impl):
+    if impl == "pallas":
+        return _pallas_path(r, k, v, w, u, chunk, interpret=False)
+    if impl == "interpret":
+        return _pallas_path(r, k, v, w, u, chunk, interpret=True)
+    return ref.wkv_chunked_jnp(r, k, v, w, u, chunk=chunk)
+
+
+def _fwd(r, k, v, w, u, chunk, impl):
+    return _wkv(r, k, v, w, u, chunk, impl), (r, k, v, w, u)
+
+
+def _bwd(chunk, impl, res, g):
+    r, k, v, w, u = res
+
+    def f(r, k, v, w, u):
+        return ref.wkv_chunked_jnp(r, k, v, w, u, chunk=chunk)
+
+    _, vjp = jax.vjp(f, r, k, v, w, u)
+    return vjp(g)
+
+
+_wkv.defvjp(_fwd, _bwd)
+
+
+def wkv(
+    r: jnp.ndarray,  # (B, L, H, K)
+    k: jnp.ndarray,
+    v: jnp.ndarray,  # (B, L, H, V)
+    w: jnp.ndarray,  # (B, L, H, K) decay in (0,1)
+    u: jnp.ndarray,  # (H, K)
+    *,
+    chunk: int = 64,
+    impl: str = "auto",
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """RWKV6 WKV core: returns (y (B,L,H,V), final_state (B,H,K,V))."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    l = r.shape[1]
+    chunk = min(chunk, l)
+    pad = (-l) % chunk
+    if pad:
+        # identity padding: w=1 (log w = 0), k=0 -> state preserved
+        pz = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        po = lambda t: jnp.pad(
+            t, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0
+        )
+        y, s_fin = _wkv(pz(r), pz(k), pz(v), po(w), u, chunk, impl)
+        return y[:, :l], s_fin
+    return _wkv(r, k, v, w, u, chunk, impl)
+
+
+wkv_decode_step = ref.wkv_decode_step

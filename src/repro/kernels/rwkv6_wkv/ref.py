@@ -1,0 +1,119 @@
+"""Oracles for the RWKV6 ("Finch") WKV core with data-dependent decay.
+
+Semantics per (batch, head); state S in R^{K x V}:
+
+    y_t = r_t @ (S_{t-1} + diag(u) k_t^T v_t)        # u: per-channel bonus
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t              # w_t in (0,1), per token
+
+Two references: ``wkv_scan_ref`` (sequential oracle) and ``wkv_chunked_jnp``
+(the chunk-parallel math the Pallas kernel implements; all in-chunk exponents
+are differences of cumulative log decays with j <= i-1, hence <= 0 — no
+overflow by construction).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv_scan_ref(
+    r: jnp.ndarray,  # (B, L, H, K)
+    k: jnp.ndarray,  # (B, L, H, K)
+    v: jnp.ndarray,  # (B, L, H, V)
+    w: jnp.ndarray,  # (B, L, H, K) decay in (0, 1)
+    u: jnp.ndarray,  # (H, K) bonus
+    s0: jnp.ndarray | None = None,  # (B, H, K, V)
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    bsz, l, h, kd = r.shape
+    vd = v.shape[-1]
+
+    def per_bh(rr, kk, vv, ww, uu, s_init):
+        def step(s, inp):
+            rt, kt, vt, wt = inp
+            kv = kt[:, None] * vt[None, :]  # (K, V)
+            y = rt @ (s + uu[:, None] * kv)
+            s = wt[:, None] * s + kv
+            return s, y
+
+        s_fin, ys = jax.lax.scan(step, s_init, (rr, kk, vv, ww))
+        return ys, s_fin
+
+    if s0 is None:
+        s0 = jnp.zeros((bsz, h, kd, vd), jnp.float32)
+    f32 = lambda x: x.astype(jnp.float32)
+    f = jax.vmap(
+        jax.vmap(per_bh, in_axes=(1, 1, 1, 1, 0, 0), out_axes=(1, 0)),
+        in_axes=(0, 0, 0, 0, None, 0),
+        out_axes=(0, 0),
+    )
+    y, s_fin = f(f32(r), f32(k), f32(v), f32(w), f32(u), s0)
+    return y.astype(r.dtype), s_fin
+
+
+def wkv_chunked_jnp(
+    r: jnp.ndarray,  # (B, L, H, K)
+    k: jnp.ndarray,
+    v: jnp.ndarray,  # (B, L, H, V)
+    w: jnp.ndarray,  # (B, L, H, K)
+    u: jnp.ndarray,  # (H, K)
+    chunk: int = 64,
+    s0: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked WKV as a scan over chunks (memory-bounded; see mamba2 ref)."""
+    from repro.utils import unroll_scans_enabled
+
+    bsz, l, h, kd = r.shape
+    vd = v.shape[-1]
+    assert l % chunk == 0
+    nc = l // chunk
+    f32 = lambda x: x.astype(jnp.float32)
+    cs = lambda t: jnp.moveaxis(t.reshape(bsz, nc, chunk, *t.shape[2:]), 1, 0)
+    rr = cs(f32(r))
+    kk = cs(f32(k))
+    vv = cs(f32(v))
+    lw = cs(jnp.log(jnp.clip(f32(w), 1e-20, 1.0)))
+    uf = f32(u)
+
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    if s0 is None:
+        s0 = jnp.zeros((bsz, h, kd, vd), jnp.float32)
+
+    @jax.checkpoint
+    def body(s, inp):
+        rc, kc, vc, lwc = inp  # (B,Q,H,K), ..., (B,Q,H,V), (B,Q,H,K)
+        cw = jnp.cumsum(lwc, axis=1)  # inclusive
+        cw_shift = cw - lwc  # exclusive: cw_{i-1}, 0 at i=0
+        total = cw[:, -1]  # (B,H,K)
+        diff = cw_shift[:, :, None] - cw[:, None]  # (B,Qi,Qj,H,K)
+        # clamp inside exp (masked diffs are positive; see mamba2_ssd/ref.py)
+        decay = jnp.exp(jnp.where(mask[None, :, :, None, None], diff, -1e30))
+        score = jnp.einsum("bihk,bjhk,bijhk->bijh", rc, kc, decay)
+        y = jnp.einsum("bijh,bjhv->bihv", score, vc)
+        coeff = jnp.einsum("bihk,hk,bihk->bih", rc, uf, kc)
+        y += coeff[..., None] * vc
+        y += jnp.einsum("bihk,bhkv->bihv", rc * jnp.exp(cw_shift), s)
+        wk = kc * jnp.exp(total[:, None] - cw)  # (B,Q,H,K)
+        s_new = jnp.exp(total)[..., None] * s + jnp.einsum(
+            "bjhk,bjhv->bhkv", wk, vc
+        )
+        return s_new, y
+
+    s_fin, ys = jax.lax.scan(body, s0, (rr, kk, vv, lw), unroll=unroll_scans_enabled())
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, l, h, vd)
+    return y.astype(r.dtype), s_fin
+
+
+def wkv_decode_step(
+    r: jnp.ndarray,  # (B, H, K)
+    k: jnp.ndarray,
+    v: jnp.ndarray,  # (B, H, V)
+    w: jnp.ndarray,  # (B, H, K)
+    u: jnp.ndarray,  # (H, K)
+    s: jnp.ndarray,  # (B, H, K, V)
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """O(1) recurrent decode step (long_500k serving path)."""
+    f32 = lambda x: x.astype(jnp.float32)
+    kv = f32(k)[..., :, None] * f32(v)[..., None, :]  # (B,H,K,V)
+    y = jnp.einsum("bhk,bhkv->bhv", f32(r), s + f32(u)[None, :, :, None] * kv)
+    s_new = f32(w)[..., :, None] * s + kv
+    return y.astype(r.dtype), s_new

@@ -1,0 +1,127 @@
+import os
+import sys
+
+if "--dryrun" in sys.argv:  # must precede ANY jax import (device-count lock)
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Chargax PPO at pod scale — the paper's technique as a first-class feature.
+
+Two modes:
+  * real training (any device count):   python -m repro.launch.rl_train
+  * production-mesh dry-run (512 dev):  python -m repro.launch.rl_train --dryrun
+
+The dry-run lowers ONE full PPO update (rollout scan + GAE + minibatch
+epochs) with the environment batch sharded across the data axes of the
+16x16 / 2x16x16 meshes — the paper-representative cell of EXPERIMENTS.md
+§Roofline: on-device env steps mean rollouts never leave the chips, the
+paper's core claim generalised to pods (DESIGN.md §3).
+"""
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis.hlo import collective_stats
+from repro.core import ChargaxEnv, EnvConfig
+from repro.rl import PPOConfig, make_train
+
+
+def make_shard_envs(mesh):
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    spec = P(dp if len(dp) > 1 else dp[0], None)
+
+    def constrain(obs):
+        return jax.lax.with_sharding_constraint(obs, NamedSharding(mesh, spec))
+
+    return constrain
+
+
+def run_dryrun(args) -> dict:
+    from repro.launch.mesh import make_production_mesh
+
+    results = []
+    for multi_pod in (False, True):
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        n_dev = mesh.devices.size
+        env = ChargaxEnv(EnvConfig(scenario=args.scenario, traffic=args.traffic))
+        cfg = PPOConfig(
+            num_envs=args.num_envs * n_dev,
+            rollout_steps=args.rollout,
+            total_timesteps=args.num_envs * n_dev * args.rollout,  # 1 update
+            num_minibatches=4,
+            hidden=(128, 128),
+        )
+        with jax.sharding.set_mesh(mesh):
+            train = make_train(cfg, env, shard_envs=make_shard_envs(mesh))
+            t0 = time.perf_counter()
+            lowered = jax.jit(train).lower(jax.random.key(0))
+            compiled = lowered.compile()
+            wall = time.perf_counter() - t0
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        rec = {
+            "cell": "chargax-ppo-update",
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "num_envs": cfg.num_envs,
+            "rollout_steps": cfg.rollout_steps,
+            "compile_s": round(wall, 2),
+            "bytes_per_device": int(
+                getattr(mem, "argument_size_in_bytes", 0)
+                + getattr(mem, "temp_size_in_bytes", 0)
+            ),
+            "hlo_flops": float(cost.get("flops", -1)),
+            "hlo_bytes": float(cost.get("bytes accessed", -1)),
+            "collectives": collective_stats(compiled.as_text()),
+            "ok": True,
+        }
+        print(json.dumps(rec, indent=1))
+        results.append(rec)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    return results
+
+
+def run_train(args):
+    env = ChargaxEnv(EnvConfig(scenario=args.scenario, traffic=args.traffic))
+    cfg = PPOConfig(
+        total_timesteps=args.timesteps,
+        num_envs=args.num_envs,
+        rollout_steps=args.rollout,
+    )
+    train = jax.jit(make_train(cfg, env))
+    t0 = time.perf_counter()
+    out = train(jax.random.key(args.seed))
+    jax.block_until_ready(out["metrics"]["rollout_reward"])
+    wall = time.perf_counter() - t0
+    rr = out["metrics"]["rollout_reward"]
+    print(
+        f"[ppo] {args.timesteps:,} steps in {wall:.1f}s "
+        f"({args.timesteps/wall:,.0f} env-steps/s) | "
+        f"reward first->last: {float(rr[0]):.1f} -> {float(rr[-1]):.1f}"
+    )
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", action="store_true")
+    ap.add_argument("--scenario", default="shopping")
+    ap.add_argument("--traffic", default="medium")
+    ap.add_argument("--timesteps", type=int, default=300_000)
+    ap.add_argument("--num-envs", type=int, default=12)
+    ap.add_argument("--rollout", type=int, default=300)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="results/ppo_dryrun.json")
+    args = ap.parse_args(argv)
+    if args.dryrun:
+        return run_dryrun(args)
+    return run_train(args)
+
+
+if __name__ == "__main__":
+    main()

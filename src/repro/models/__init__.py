@@ -1,0 +1,6 @@
+"""Model zoo: the 10 assigned architectures as selectable configs."""
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+from repro.models.lm import CausalLM
+from repro.models.encdec import EncDecLM
+
+__all__ = ["SHAPES", "ModelConfig", "ShapeConfig", "CausalLM", "EncDecLM"]

@@ -1,0 +1,478 @@
+"""Per-layer blocks: GQA attention, (MoE-)MLP, Mamba2, RWKV6.
+
+Every block exposes ``init_*`` / ``*_train`` / ``*_decode``:
+
+  * train:  full-sequence causal pass, (B, L, d) -> (B, L, d)
+  * decode: single-token pass with an explicit cache pytree,
+            (B, 1, d), cache -> (B, 1, d), cache
+
+Blocks of the same kind share a parameter structure so layers stack under
+``jax.vmap(init)`` and run under ``jax.lax.scan`` (compact HLO, fast AOT
+compiles — essential for the 80-cell dry-run matrix).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.mamba2_ssd.ops import ssd, ssd_decode_step
+from repro.kernels.rwkv6_wkv.ops import wkv, wkv_decode_step
+from repro.models.config import ModelConfig
+from repro.models.modules import (
+    apply_rope,
+    dense_param,
+    glu_act,
+    rms_norm,
+    softcap,
+)
+
+NEG_INF = -1e30
+
+
+# ===========================================================================
+# Attention (GQA + qk-norm + sliding window + softcap + RoPE variants)
+# ===========================================================================
+def init_attention(key, cfg: ModelConfig, dtype, cross: bool = False) -> dict:
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "q_proj": dense_param(ks[0], d, h * hd, dtype),
+        "k_proj": dense_param(ks[1], d, hkv * hd, dtype),
+        "v_proj": dense_param(ks[2], d, hkv * hd, dtype),
+        "o_proj": dense_param(ks[3], h * hd, d, dtype, scale=(h * hd) ** -0.5 / (2 * cfg.n_layers) ** 0.5),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _qkv(p, cfg: ModelConfig, x, kv_x=None):
+    """Project and reshape to (B, H, L, hd) / (B, Hkv, L, hd)."""
+    b, l, _ = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    kv_x = x if kv_x is None else kv_x
+    lk = kv_x.shape[1]
+    q = (x @ p["q_proj"]).reshape(b, l, h, hd).transpose(0, 2, 1, 3)
+    k = (kv_x @ p["k_proj"]).reshape(b, lk, hkv, hd).transpose(0, 2, 1, 3)
+    v = (kv_x @ p["v_proj"]).reshape(b, lk, hkv, hd).transpose(0, 2, 1, 3)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def attn_train(
+    p, x, cfg: ModelConfig, *, window: int | None = None, causal: bool = True,
+    positions=None, kv_x=None,
+):
+    b, l, _ = x.shape
+    q, k, v = _qkv(p, cfg, x, kv_x)
+    if causal and kv_x is None:
+        pos = jnp.arange(l) if positions is None else positions
+        q = apply_rope(q, pos, cfg.rope_theta, cfg.rope_mode)
+        k = apply_rope(k, pos, cfg.rope_theta, cfg.rope_mode)
+    out = flash_attention(
+        q, k, v, causal=causal and kv_x is None, window=window,
+        softcap=cfg.attn_softcap, scale=cfg.hd**-0.5,
+    )
+    out = out.transpose(0, 2, 1, 3).reshape(b, l, -1)
+    return out @ p["o_proj"]
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((batch, hkv, max_len, hd), dtype),
+        "v": jnp.zeros((batch, hkv, max_len, hd), dtype),
+    }
+
+
+def attn_decode(
+    p, x_t, cache: dict, pos, cfg: ModelConfig, *, window: int | None = None,
+):
+    """One-token decode against the KV cache.  ``pos``: () int32 current index."""
+    b = x_t.shape[0]
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    g = h // hkv
+    q, k_new, v_new = _qkv(p, cfg, x_t)
+    pos_arr = jnp.full((1,), pos, jnp.int32)
+    q = apply_rope(q, pos_arr, cfg.rope_theta, cfg.rope_mode)
+    k_new = apply_rope(k_new, pos_arr, cfg.rope_theta, cfg.rope_mode)
+
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype), (0, 0, pos, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype), (0, 0, pos, 0))
+
+    s_len = k_cache.shape[2]
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, hd)
+    scores = jnp.einsum("bhgd,bhsd->bhgs", qf, k_cache.astype(jnp.float32)) * cfg.hd**-0.5
+    scores = softcap(scores, cfg.attn_softcap)
+    idx = jnp.arange(s_len)
+    valid = idx <= pos
+    if window is not None:
+        valid &= idx > pos - window
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", probs, v_cache.astype(jnp.float32))
+    out = out.reshape(b, 1, h * hd).astype(x_t.dtype)
+    return out @ p["o_proj"], {"k": k_cache, "v": v_cache}
+
+
+# ===========================================================================
+# Dense MLP (SwiGLU / GeGLU / plain GELU for whisper)
+# ===========================================================================
+def init_mlp(key, cfg: ModelConfig, dtype, d_ff: int | None = None) -> dict:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act == "gelu":
+        return {
+            "up_proj": dense_param(ks[0], d, ff, dtype),
+            "down_proj": dense_param(ks[1], ff, d, dtype, scale=ff**-0.5 / (2 * cfg.n_layers) ** 0.5),
+        }
+    return {
+        "gate_proj": dense_param(ks[0], d, ff, dtype),
+        "up_proj": dense_param(ks[1], d, ff, dtype),
+        "down_proj": dense_param(ks[2], ff, d, dtype, scale=ff**-0.5 / (2 * cfg.n_layers) ** 0.5),
+    }
+
+
+def mlp_apply(p, x, cfg: ModelConfig):
+    if "gate_proj" in p:
+        h = glu_act(x @ p["gate_proj"], x @ p["up_proj"], cfg.act)
+    else:
+        h = jax.nn.gelu(x @ p["up_proj"], approximate=True)
+    return h @ p["down_proj"]
+
+
+# ===========================================================================
+# MoE (top-k, GShard-style grouped one-hot dispatch — DESIGN.md §5)
+# ===========================================================================
+def init_moe(key, cfg: ModelConfig, dtype) -> dict:
+    d, e, ff = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    ks = jax.random.split(key, 4)
+    std_in, std_out = d**-0.5, ff**-0.5 / (2 * cfg.n_layers) ** 0.5
+    tn = lambda k, shape, std: (
+        jax.random.truncated_normal(k, -3.0, 3.0, shape, jnp.float32) * std
+    ).astype(dtype)
+    return {
+        "router": dense_param(ks[0], d, e, jnp.float32),  # router in fp32
+        "expert_w_gate": tn(ks[1], (e, d, ff), std_in),
+        "expert_w_up": tn(ks[2], (e, d, ff), std_in),
+        "expert_w_down": tn(ks[3], (e, ff, d), std_out),
+    }
+
+
+def moe_apply(p, x, cfg: ModelConfig):
+    """Returns (y, aux_loss).  x: (B, L, d).
+
+    Dispatch/combine/expert tensors carry explicit sharding annotations
+    (token groups over the data axes, experts over 'model' = EP) — without
+    them GSPMD replicates the (g, sg, E, cap) one-hots, which dominated the
+    MoE cells' memory (§Perf iteration 2).
+    """
+    import math
+
+    from repro.distributed.sharding import DP, constrain
+
+    b, l, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    tokens = b * l
+    sg = cfg.router_group if tokens % cfg.router_group == 0 else math.gcd(tokens, cfg.router_group)
+    g = tokens // sg
+    cap = max(int(sg * k * cfg.capacity_factor / e), 1)
+
+    # token groups ride the strategy's batch axes (DP sentinel); the dedupe
+    # in `constrain` then leaves the expert dim to inherit EP from the
+    # weights.  (Pinning groups to data-only axes was REFUTED in
+    # §Perf-hillclimb h2: it forces a reshard at every MoE layer.)
+    token_axes = DP
+    xg = constrain(x.reshape(g, sg, d), token_axes, None, None)
+    logits = (xg.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # (g, sg, e)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(probs, k)  # (g, sg, k)
+    top_vals = top_vals / jnp.maximum(top_vals.sum(-1, keepdims=True), 1e-9)
+
+    # slot-sequential dispatch: earlier slots get capacity priority
+    counts = jnp.zeros((g, e), jnp.float32)
+    combine = jnp.zeros((g, sg, e, cap), jnp.float32)
+    dispatch = jnp.zeros((g, sg, e, cap), jnp.float32)
+    for j in range(k):
+        onehot = jax.nn.one_hot(top_idx[..., j], e, dtype=jnp.float32)  # (g, sg, e)
+        pos = counts[:, None, :] + jnp.cumsum(onehot, axis=1) - onehot  # rank
+        keep = (pos < cap) * onehot
+        pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)
+        slot = keep[..., None] * pos_oh  # (g, sg, e, cap)
+        dispatch = dispatch + slot
+        combine = combine + slot * top_vals[..., j][..., None, None]
+        counts = counts + onehot.sum(axis=1)
+
+    cd = jnp.bfloat16 if x.dtype == jnp.bfloat16 else jnp.float32
+    dispatch = constrain(dispatch.astype(cd), token_axes, None, "model", None)
+    combine = constrain(combine.astype(cd), token_axes, None, "model", None)
+    expert_in = jnp.einsum("gsec,gsd->egcd", dispatch, xg.astype(cd))  # (e,g,cap,d)
+    expert_in = constrain(expert_in, "model", token_axes, None, None)
+    h = glu_act(
+        jnp.einsum("egcd,edf->egcf", expert_in, p["expert_w_gate"]),
+        jnp.einsum("egcd,edf->egcf", expert_in, p["expert_w_up"]),
+        "swiglu",
+    )
+    expert_out = jnp.einsum("egcf,efd->egcd", h, p["expert_w_down"])
+    expert_out = constrain(expert_out, "model", token_axes, None, None)
+    y = jnp.einsum("gsec,egcd->gsd", combine, expert_out)
+
+    # Switch-style load-balance aux loss
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(top_idx[..., 0], e, dtype=jnp.float32), axis=(0, 1)
+    )
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+    return y.reshape(b, l, d).astype(x.dtype), aux
+
+
+def moe_decode(p, x_t, cfg: ModelConfig):
+    """Single-token MoE: dense top-k gather (tiny batch; no dispatch tensors)."""
+    b, l, d = x_t.shape
+    k = cfg.top_k
+    logits = x_t.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(probs, k)  # (b, 1, k)
+    top_vals = top_vals / jnp.maximum(top_vals.sum(-1, keepdims=True), 1e-9)
+
+    wg = p["expert_w_gate"][top_idx[:, 0]]  # (b, k, d, ff)
+    wu = p["expert_w_up"][top_idx[:, 0]]
+    wd = p["expert_w_down"][top_idx[:, 0]]
+    xt = x_t[:, 0]  # (b, d)
+    h = glu_act(
+        jnp.einsum("bd,bkdf->bkf", xt, wg), jnp.einsum("bd,bkdf->bkf", xt, wu), "swiglu"
+    )
+    y = jnp.einsum("bkf,bkfd->bkd", h, wd)
+    y = jnp.einsum("bkd,bk->bd", y, top_vals[:, 0].astype(y.dtype))
+    return y[:, None].astype(x_t.dtype)
+
+
+# ===========================================================================
+# Mamba2 block (zamba2's SSM component)
+# ===========================================================================
+def _mamba_dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    conv_dim = d_inner + 2 * cfg.ssm_state
+    return d_inner, n_heads, conv_dim
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    d_inner, nh, conv_dim = _mamba_dims(cfg)
+    proj_out = 2 * d_inner + 2 * cfg.ssm_state + nh  # z, x, B, C, dt
+    ks = jax.random.split(key, 4)
+    return {
+        "ssm_in_proj": dense_param(ks[0], d, proj_out, dtype),
+        "ssm_conv": (
+            jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim), jnp.float32) * 0.1
+        ).astype(dtype),
+        "ssm_dt_bias": jnp.zeros((nh,), jnp.float32),
+        "ssm_a_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "ssm_d_skip": jnp.ones((nh,), jnp.float32),
+        "ssm_norm": jnp.ones((d_inner,), dtype),
+        "ssm_out_proj": dense_param(
+            ks[2], d_inner, d, dtype, scale=d_inner**-0.5 / (2 * cfg.n_layers) ** 0.5
+        ),
+    }
+
+
+def _causal_conv(x, w):
+    """Depthwise causal 1D conv.  x (B, L, C), w (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    return out
+
+
+def _mamba_project(p, x, cfg: ModelConfig):
+    d_inner, nh, conv_dim = _mamba_dims(cfg)
+    n = cfg.ssm_state
+    zxbcdt = x @ p["ssm_in_proj"]
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner : d_inner + conv_dim]
+    dt_raw = zxbcdt[..., d_inner + conv_dim :]  # (B, L, nh)
+    return z, xbc, dt_raw
+
+
+def mamba2_train(p, x, cfg: ModelConfig):
+    from repro.distributed.sharding import DP, constrain
+
+    b, l, _ = x.shape
+    d_inner, nh, conv_dim = _mamba_dims(cfg)
+    n, hd = cfg.ssm_state, cfg.ssm_head_dim
+    z, xbc, dt_raw = _mamba_project(p, x, cfg)
+    # GSPMD loses the batch sharding through the conv/reshape chain without
+    # these pins — zamba2 activations replicated per-device otherwise
+    # (§Perf iteration 3)
+    z = constrain(z, DP, None, None)
+    xbc = constrain(jax.nn.silu(_causal_conv(xbc, p["ssm_conv"])), DP, None, None)
+    xs = constrain(
+        xbc[..., :d_inner].reshape(b, l, nh, hd), DP, None, "model", None
+    )
+    b_mat = xbc[..., d_inner : d_inner + n]
+    c_mat = xbc[..., d_inner + n :]
+    dt = constrain(
+        jax.nn.softplus(dt_raw.astype(jnp.float32) + p["ssm_dt_bias"]),
+        DP, None, "model",
+    )
+    a = -jnp.exp(p["ssm_a_log"])
+    y, _ = ssd(xs, dt, a, b_mat, c_mat)
+    y = constrain(y, DP, None, "model", None)
+    y = y + xs * p["ssm_d_skip"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(b, l, d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), p["ssm_norm"], cfg.norm_eps)
+    return y @ p["ssm_out_proj"]
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int) -> dict:
+    d_inner, nh, conv_dim = _mamba_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), jnp.float32),
+        "ssm": jnp.zeros((batch, nh, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32),
+    }
+
+
+def mamba2_decode(p, x_t, cache: dict, cfg: ModelConfig):
+    b = x_t.shape[0]
+    d_inner, nh, conv_dim = _mamba_dims(cfg)
+    n, hd = cfg.ssm_state, cfg.ssm_head_dim
+    z, xbc, dt_raw = _mamba_project(p, x_t, cfg)  # (B, 1, ...)
+
+    window = jnp.concatenate([cache["conv"], xbc.astype(jnp.float32)], axis=1)  # (B, K, C)
+    w = p["ssm_conv"].astype(jnp.float32)
+    xbc_c = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, w))  # (B, C)
+    new_conv = window[:, 1:]
+
+    xs = xbc_c[..., :d_inner].reshape(b, nh, hd)
+    b_t = xbc_c[..., d_inner : d_inner + n]
+    c_t = xbc_c[..., d_inner + n :]
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["ssm_dt_bias"])
+    a = -jnp.exp(p["ssm_a_log"])
+    y, s_new = ssd_decode_step(xs, dt, a, b_t, c_t, cache["ssm"])
+    y = y + xs * p["ssm_d_skip"][None, :, None]
+    y = y.reshape(b, 1, d_inner).astype(x_t.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), p["ssm_norm"], cfg.norm_eps)
+    return y @ p["ssm_out_proj"], {"conv": new_conv, "ssm": s_new}
+
+
+# ===========================================================================
+# RWKV6 block (time-mix with data-dependent decay + channel-mix)
+# ===========================================================================
+def init_rwkv6(key, cfg: ModelConfig, dtype) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    hd = cfg.rwkv_head_dim
+    nh = d // hd
+    dw = max(d // 16, 32)  # decay-LoRA rank
+    ks = jax.random.split(key, 10)
+    mix = lambda k_: (jax.random.uniform(k_, (d,), jnp.float32)).astype(jnp.float32)
+    return {
+        "tm_mix_r": mix(ks[0]) * 0.5,
+        "tm_mix_k": mix(ks[1]) * 0.5,
+        "tm_mix_v": mix(ks[2]) * 0.5,
+        "tm_mix_w": mix(ks[3]) * 0.5,
+        "tm_mix_g": mix(ks[4]) * 0.5,
+        "r_proj": dense_param(ks[5], d, d, dtype),
+        "k_proj": dense_param(ks[6], d, d, dtype),
+        "v_proj": dense_param(ks[7], d, d, dtype),
+        "g_proj": dense_param(ks[8], d, d, dtype),
+        "o_proj": dense_param(ks[9], d, d, dtype, scale=d**-0.5 / (2 * cfg.n_layers) ** 0.5),
+        "w_base": jnp.full((d,), -4.0, jnp.float32),  # decay bias (w = exp(-exp(.)))
+        "w_lora_a": dense_param(jax.random.fold_in(key, 1), d, dw, jnp.float32),
+        "w_lora_b": dense_param(jax.random.fold_in(key, 2), dw, d, jnp.float32) * 0.1,
+        "u_bonus": (jax.random.normal(jax.random.fold_in(key, 3), (nh, hd), jnp.float32) * 0.3),
+        "wkv_norm": jnp.ones((d,), dtype),
+        # channel mix
+        "cm_mix_k": mix(jax.random.fold_in(key, 4)) * 0.5,
+        "cm_mix_r": mix(jax.random.fold_in(key, 5)) * 0.5,
+        "cm_k_proj": dense_param(jax.random.fold_in(key, 6), d, ff, dtype),
+        "cm_v_proj": dense_param(
+            jax.random.fold_in(key, 7), ff, d, dtype, scale=ff**-0.5 / (2 * cfg.n_layers) ** 0.5
+        ),
+        "cm_r_proj": dense_param(jax.random.fold_in(key, 8), d, d, dtype),
+    }
+
+
+def _token_shift(x, last=None):
+    """x_{t-1} (zeros / ``last`` at t=0).  x: (B, L, d)."""
+    if last is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([last[:, None], x[:, :-1]], axis=1)
+
+
+def _rwkv_wkv_inputs(p, x, xs, cfg: ModelConfig):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    nh = d // hd
+    lerp = lambda mu: x + (xs - x) * mu.astype(x.dtype)
+    shape = x.shape[:-1] + (nh, hd)
+    r = (lerp(p["tm_mix_r"]) @ p["r_proj"]).reshape(shape)
+    k = (lerp(p["tm_mix_k"]) @ p["k_proj"]).reshape(shape)
+    v = (lerp(p["tm_mix_v"]) @ p["v_proj"]).reshape(shape)
+    g = jax.nn.silu((lerp(p["tm_mix_g"]) @ p["g_proj"]).astype(jnp.float32))
+    xw = lerp(p["tm_mix_w"]).astype(jnp.float32)
+    w_log = p["w_base"] + jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]
+    w = jnp.exp(-jnp.exp(w_log)).reshape(shape)  # data-dependent decay
+    return r, k, v, g, w
+
+
+def rwkv6_time_mix_train(p, x, cfg: ModelConfig):
+    b, l, d = x.shape
+    xs = _token_shift(x)
+    r, k, v, g, w = _rwkv_wkv_inputs(p, x, xs, cfg)
+    y, _ = wkv(r, k, v, w, p["u_bonus"])
+    y = y.reshape(b, l, d)
+    y = rms_norm(y, p["wkv_norm"], cfg.norm_eps)
+    y = (y.astype(jnp.float32) * g).astype(x.dtype)
+    return y @ p["o_proj"]
+
+
+def rwkv6_channel_mix_train(p, x, cfg: ModelConfig, last=None):
+    xs = _token_shift(x, last)
+    lerp = lambda mu: x + (xs - x) * mu.astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(lerp(p["cm_mix_k"]) @ p["cm_k_proj"]))
+    rr = jax.nn.sigmoid((lerp(p["cm_mix_r"]) @ p["cm_r_proj"]).astype(jnp.float32))
+    return (rr * (kk @ p["cm_v_proj"]).astype(jnp.float32)).astype(x.dtype)
+
+
+def init_rwkv_cache(cfg: ModelConfig, batch: int) -> dict:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    nh = d // hd
+    return {
+        "tm_last": jnp.zeros((batch, d), jnp.float32),
+        "cm_last": jnp.zeros((batch, d), jnp.float32),
+        "wkv": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+    }
+
+
+def rwkv6_decode(p, x_t, cache: dict, cfg: ModelConfig):
+    """Full RWKV6 layer decode (time-mix + channel-mix with residuals applied
+    by the caller around each half)."""
+    raise NotImplementedError("decode is assembled in lm.py per half-layer")
+
+
+def rwkv6_time_mix_decode(p, x_t, cache, cfg: ModelConfig):
+    b, _, d = x_t.shape
+    xs = cache["tm_last"][:, None].astype(x_t.dtype)
+    r, k, v, g, w = _rwkv_wkv_inputs(p, x_t, xs, cfg)
+    y, s_new = wkv_decode_step(
+        r[:, 0], k[:, 0], v[:, 0], w[:, 0], p["u_bonus"], cache["wkv"]
+    )
+    y = y.reshape(b, 1, d)
+    y = rms_norm(y, p["wkv_norm"], cfg.norm_eps)
+    y = (y.astype(jnp.float32) * g).astype(x_t.dtype)
+    cache = dict(cache, tm_last=x_t[:, 0].astype(jnp.float32), wkv=s_new)
+    return y @ p["o_proj"], cache
+
+
+def rwkv6_channel_mix_decode(p, x_t, cache, cfg: ModelConfig):
+    y = rwkv6_channel_mix_train(
+        p, x_t, cfg, last=cache["cm_last"].astype(x_t.dtype)
+    )
+    cache = dict(cache, cm_last=x_t[:, 0].astype(jnp.float32))
+    return y, cache

@@ -1,0 +1,418 @@
+"""Decoder-only LM assembly for the dense / moe / ssm / hybrid families.
+
+Layers are weight-stacked (``jax.vmap`` over init) and executed under
+``jax.lax.scan`` — compact HLO, fast AOT compiles for the dry-run matrix, and
+the natural structure for per-layer remat.  Hybrid (zamba2) runs grouped
+scans with a weight-shared attention block between groups.  Gemma2 scans over
+(local, global) layer *pairs*.
+
+Decode: the stacked per-layer cache rides through the same scan.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks
+from repro.models.config import ModelConfig
+from repro.models.modules import embed_param, rms_norm, softcap, _dtype
+
+
+# ---------------------------------------------------------------------------
+# per-layer init/apply for each family
+# ---------------------------------------------------------------------------
+def _init_dense_layer(key, cfg: ModelConfig, dtype) -> dict:
+    ka, km = jax.random.split(key)
+    p = {
+        "attn": blocks.init_attention(ka, cfg, dtype),
+        "input_norm": jnp.ones((cfg.d_model,), dtype),
+        "pre_mlp_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if cfg.family == "moe":
+        p["moe"] = blocks.init_moe(km, cfg, dtype)
+    else:
+        p["mlp"] = blocks.init_mlp(km, cfg, dtype)
+    if cfg.sandwich_norm:
+        p["post_attn_norm"] = jnp.ones((cfg.d_model,), dtype)
+        p["post_mlp_norm"] = jnp.ones((cfg.d_model,), dtype)
+    return p
+
+
+def _dense_layer_train(lp, x, cfg: ModelConfig, window, gemma: bool):
+    h = rms_norm(x, lp["input_norm"], cfg.norm_eps, plus_one=gemma)
+    a = blocks.attn_train(lp["attn"], h, cfg, window=window)
+    if cfg.sandwich_norm:
+        a = rms_norm(a, lp["post_attn_norm"], cfg.norm_eps, plus_one=gemma)
+    x = x + a
+    h = rms_norm(x, lp["pre_mlp_norm"], cfg.norm_eps, plus_one=gemma)
+    aux = 0.0
+    if "moe" in lp:
+        m, aux = blocks.moe_apply(lp["moe"], h, cfg)
+    else:
+        m = blocks.mlp_apply(lp["mlp"], h, cfg)
+    if cfg.sandwich_norm:
+        m = rms_norm(m, lp["post_mlp_norm"], cfg.norm_eps, plus_one=gemma)
+    return x + m, aux
+
+
+def _dense_layer_decode(lp, x_t, cache, pos, cfg: ModelConfig, window, gemma: bool):
+    h = rms_norm(x_t, lp["input_norm"], cfg.norm_eps, plus_one=gemma)
+    a, cache = blocks.attn_decode(lp["attn"], h, cache, pos, cfg, window=window)
+    if cfg.sandwich_norm:
+        a = rms_norm(a, lp["post_attn_norm"], cfg.norm_eps, plus_one=gemma)
+    x_t = x_t + a
+    h = rms_norm(x_t, lp["pre_mlp_norm"], cfg.norm_eps, plus_one=gemma)
+    if "moe" in lp:
+        m = blocks.moe_decode(lp["moe"], h, cfg)
+    else:
+        m = blocks.mlp_apply(lp["mlp"], h, cfg)
+    if cfg.sandwich_norm:
+        m = rms_norm(m, lp["post_mlp_norm"], cfg.norm_eps, plus_one=gemma)
+    return x_t + m, cache
+
+
+def _init_rwkv_layer(key, cfg: ModelConfig, dtype) -> dict:
+    return {
+        "rwkv": blocks.init_rwkv6(key, cfg, dtype),
+        "input_norm": jnp.ones((cfg.d_model,), dtype),
+        "pre_mlp_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def _rwkv_layer_train(lp, x, cfg: ModelConfig):
+    x = x + blocks.rwkv6_time_mix_train(
+        lp["rwkv"], rms_norm(x, lp["input_norm"], cfg.norm_eps), cfg
+    )
+    x = x + blocks.rwkv6_channel_mix_train(
+        lp["rwkv"], rms_norm(x, lp["pre_mlp_norm"], cfg.norm_eps), cfg
+    )
+    return x, 0.0
+
+
+def _rwkv_layer_decode(lp, x_t, cache, cfg: ModelConfig):
+    h = rms_norm(x_t, lp["input_norm"], cfg.norm_eps)
+    y, cache = blocks.rwkv6_time_mix_decode(lp["rwkv"], h, cache, cfg)
+    x_t = x_t + y
+    h = rms_norm(x_t, lp["pre_mlp_norm"], cfg.norm_eps)
+    y, cache = blocks.rwkv6_channel_mix_decode(lp["rwkv"], h, cache, cfg)
+    return x_t + y, cache
+
+
+def _init_mamba_layer(key, cfg: ModelConfig, dtype) -> dict:
+    return {
+        "mamba": blocks.init_mamba2(key, cfg, dtype),
+        "input_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def _mamba_layer_train(lp, x, cfg: ModelConfig):
+    return x + blocks.mamba2_train(
+        lp["mamba"], rms_norm(x, lp["input_norm"], cfg.norm_eps), cfg
+    )
+
+
+def _mamba_layer_decode(lp, x_t, cache, cfg: ModelConfig):
+    y, cache = blocks.mamba2_decode(
+        lp["mamba"], rms_norm(x_t, lp["input_norm"], cfg.norm_eps), cache, cfg
+    )
+    return x_t + y, cache
+
+
+# ---------------------------------------------------------------------------
+# Chunked cross-entropy: never materialises the (tokens, vocab) logits.
+# The (B, L, V) fp32 logits tensor was the dominant memory term of every
+# train/prefill cell (hundreds of GiB/device for the 256k-vocab archs) —
+# scanning the unembed+CE over token chunks with per-chunk remat removes it
+# (EXPERIMENTS.md §Perf, iteration 1).
+# ---------------------------------------------------------------------------
+def _pow2_divisor(n: int, target: int) -> int:
+    c = 1
+    while c * 2 <= target and n % (c * 2) == 0:
+        c *= 2
+    return c
+
+
+def chunked_softmax_xent(
+    x: jnp.ndarray,  # (B, L, d) final hidden states
+    w: jnp.ndarray,  # (d, V) unembedding
+    labels: jnp.ndarray,  # (B, L) int32
+    softcap_val: float | None = None,
+    chunk_len: int = 512,
+    unroll: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (mean nll, mean logz^2) over all tokens.
+
+    Chunks the SEQUENCE axis (scan xs = (B, chunk, d)) so the batch dim — and
+    its data-axis sharding — survives into every chunk's logits.
+    """
+    from repro.distributed.sharding import constrain
+    from repro.utils import unroll_scans_enabled
+
+    unroll = unroll or unroll_scans_enabled()
+    b, l, d = x.shape
+    if unroll:  # probe compiles: fewer, larger chunks keep compile tractable
+        chunk_len = max(l // 8, 1)
+    chunk = _pow2_divisor(l, min(chunk_len, l))
+    n = l // chunk
+    xs = jnp.moveaxis(x.reshape(b, n, chunk, d), 1, 0)  # (n, B, chunk, d)
+    ls = jnp.moveaxis(labels.reshape(b, n, chunk), 1, 0)
+    # hoist ONE bf16 gather of the (FSDP-sharded) unembedding out of the
+    # chunk loop — otherwise every chunk re-gathers it, in f32, which was
+    # the dominant collective of the fsdp train cells (§Perf-hillclimb h4).
+    # Gated by table size: for 256k-vocab archs (gemma2) replicating the
+    # table + its full fp32 cotangent per microbatch costs more memory than
+    # the per-chunk gathers save (measured: gemma2 train 19 -> 82 GiB/dev
+    # ungated — §Perf iteration 6)
+    if w.shape[0] * w.shape[1] <= 4 * 10**8:
+        w = constrain(w.astype(x.dtype), None, None)
+
+    def body(carry, inp):
+        nll_sum, z_sum = carry
+        xc, lc = inp  # (B, chunk, d), (B, chunk)
+        logits = (xc @ w.astype(xc.dtype)).astype(jnp.float32)
+        logits = softcap(logits, softcap_val)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return (nll_sum + jnp.sum(logz - gold), z_sum + jnp.sum(jnp.square(logz))), None
+
+    body = jax.checkpoint(body)
+    (nll_sum, z_sum), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), jnp.float32(0.0)), (xs, ls), unroll=unroll
+    )
+    t = b * l
+    return nll_sum / t, z_sum / t
+
+
+# ---------------------------------------------------------------------------
+# LM
+# ---------------------------------------------------------------------------
+class CausalLM:
+    """Functional LM; all methods are jit/vmap-safe pure functions of params."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dtype = _dtype(cfg.param_dtype)
+        if cfg.family == "hybrid":
+            n = cfg.n_layers
+            k = cfg.shared_attn_every
+            bounds = list(range(0, n, k)) + [n]
+            self.groups = [(bounds[i], bounds[i + 1]) for i in range(len(bounds) - 1)]
+
+    # -------------------------- init ---------------------------------
+    def init(self, key: jax.Array) -> dict:
+        cfg, dtype = self.cfg, self.dtype
+        k_embed, k_layers, k_shared, k_out = jax.random.split(key, 4)
+        params: dict[str, Any] = {
+            "embed": embed_param(k_embed, cfg.vocab, cfg.d_model, dtype),
+            "final_norm": jnp.ones((cfg.d_model,), dtype),
+        }
+        if not cfg.tied_embeddings:
+            params["unembed"] = embed_param(k_out, cfg.vocab, cfg.d_model, dtype).T
+
+        layer_keys = jax.random.split(k_layers, cfg.n_layers)
+        if cfg.family in ("dense", "moe"):
+            if cfg.alt_local_global:
+                assert cfg.n_layers % 2 == 0
+                pair_keys = layer_keys.reshape(cfg.n_layers // 2, 2)
+                init_pair = lambda kk: {
+                    "local": _init_dense_layer(kk[0], cfg, dtype),
+                    "global": _init_dense_layer(kk[1], cfg, dtype),
+                }
+                params["layers"] = jax.vmap(init_pair)(pair_keys)
+            else:
+                params["layers"] = jax.vmap(
+                    lambda kk: _init_dense_layer(kk, cfg, dtype)
+                )(layer_keys)
+        elif cfg.family == "ssm":
+            params["layers"] = jax.vmap(lambda kk: _init_rwkv_layer(kk, cfg, dtype))(
+                layer_keys
+            )
+        elif cfg.family == "hybrid":
+            params["layers"] = jax.vmap(lambda kk: _init_mamba_layer(kk, cfg, dtype))(
+                layer_keys
+            )
+            shared = _init_dense_layer(k_shared, cfg, dtype)
+            params["shared_attn"] = shared
+        else:
+            raise ValueError(cfg.family)
+        return params
+
+    # -------------------------- train forward -------------------------
+    def apply_train(self, params: dict, tokens: jnp.ndarray, remat: bool = True, unroll: bool = False):
+        """tokens (B, L) int32 -> (logits (B, L, V) f32, aux_loss).
+
+        Materialises full logits — fine for smoke/eval scales; ``loss`` uses
+        the chunked CE path instead (never builds (B, L, V)).
+        """
+        x, aux_total = self.apply_hidden(params, tokens, remat, unroll)
+        return self._unembed(params, x), aux_total
+
+    def _run_layers(self, params: dict, x: jnp.ndarray, remat: bool, unroll: bool):
+        cfg = self.cfg
+        from repro.utils import unroll_scans_enabled
+
+        unroll = unroll or unroll_scans_enabled()
+        aux_total = jnp.float32(0.0)
+        if cfg.family in ("dense", "moe"):
+            if cfg.alt_local_global:
+
+                def body(x, lp):
+                    x, a1 = _dense_layer_train(lp["local"], x, cfg, cfg.window, True)
+                    x, a2 = _dense_layer_train(lp["global"], x, cfg, None, True)
+                    return x, a1 + a2
+
+            else:
+                gemma = cfg.name.startswith("gemma")
+
+                def body(x, lp):
+                    return _dense_layer_train(lp, x, cfg, cfg.window, gemma)
+
+            f = jax.checkpoint(body) if remat else body
+            x, auxs = jax.lax.scan(f, x, params["layers"], unroll=unroll)
+            aux_total = jnp.sum(auxs)
+        elif cfg.family == "ssm":
+
+            def body(x, lp):
+                return _rwkv_layer_train(lp, x, cfg)
+
+            f = jax.checkpoint(body) if remat else body
+            x, _ = jax.lax.scan(f, x, params["layers"], unroll=unroll)
+        elif cfg.family == "hybrid":
+
+            def body(x, lp):
+                return _mamba_layer_train(lp, x, cfg), None
+
+            f = jax.checkpoint(body) if remat else body
+            for gi, (s, e) in enumerate(self.groups):
+                sub = jax.tree_util.tree_map(lambda a: a[s:e], params["layers"])
+                x, _ = jax.lax.scan(f, x, sub, unroll=unroll)
+                x, _ = _dense_layer_train(params["shared_attn"], x, cfg, None, False)
+        else:
+            raise ValueError(cfg.family)
+        return x, aux_total
+
+    def _unembed(self, params, x):
+        cfg = self.cfg
+        w = params["embed"].T if cfg.tied_embeddings else params["unembed"]
+        logits = (x @ w.astype(x.dtype)).astype(jnp.float32)
+        return softcap(logits, cfg.final_softcap)
+
+    # -------------------------- loss ----------------------------------
+    def apply_hidden(self, params: dict, tokens: jnp.ndarray, remat: bool = True, unroll: bool = False):
+        """Final hidden states (B, L, d) before unembedding, + moe aux loss."""
+        cfg = self.cfg
+        x = params["embed"][tokens].astype(_dtype(cfg.compute_dtype))
+        if cfg.name.startswith("gemma"):
+            x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+        x, aux_total = self._run_layers(params, x, remat, unroll)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps,
+                     plus_one=cfg.name.startswith("gemma"))
+        return x, aux_total
+
+    def loss(self, params: dict, tokens: jnp.ndarray, labels: jnp.ndarray, remat: bool = True, unroll: bool = False):
+        cfg = self.cfg
+        x, aux = self.apply_hidden(params, tokens, remat, unroll)
+        w = params["embed"].T if cfg.tied_embeddings else params["unembed"]
+        nll, logz_sq = chunked_softmax_xent(
+            x, w, labels, softcap_val=cfg.final_softcap, unroll=unroll
+        )
+        z_loss = cfg.z_loss * logz_sq
+        total = nll + z_loss + cfg.moe_aux_loss * aux
+        return total, {"nll": nll, "z_loss": z_loss, "moe_aux": aux}
+
+    # -------------------------- decode --------------------------------
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        cfg = self.cfg
+        kv_dtype = _dtype(cfg.compute_dtype)
+        def stacked(n, tree):
+            return jax.tree_util.tree_map(
+                lambda t: jnp.zeros((n,) + t.shape, t.dtype), tree
+            )
+
+        if cfg.family in ("dense", "moe"):
+            one = blocks.init_attn_cache(cfg, batch, max_len, kv_dtype)
+            if cfg.alt_local_global:
+                return stacked(cfg.n_layers // 2, {"local": one, "global": one})
+            return stacked(cfg.n_layers, one)
+        if cfg.family == "ssm":
+            return stacked(cfg.n_layers, blocks.init_rwkv_cache(cfg, batch))
+        if cfg.family == "hybrid":
+            # the weight-shared attention block has one KV cache PER invocation
+            # site (its inputs differ per site even though weights are tied)
+            return {
+                "mamba": stacked(cfg.n_layers, blocks.init_mamba_cache(cfg, batch)),
+                "shared_attn": stacked(
+                    len(self.groups), blocks.init_attn_cache(cfg, batch, max_len, kv_dtype)
+                ),
+            }
+        raise ValueError(cfg.family)
+
+    def decode_step(self, params: dict, cache: dict, tokens_t: jnp.ndarray, pos, unroll: bool = False):
+        """tokens_t (B, 1) at position ``pos`` -> (logits (B, 1, V), cache)."""
+        cfg = self.cfg
+        x = params["embed"][tokens_t].astype(_dtype(cfg.compute_dtype))
+        if cfg.name.startswith("gemma"):
+            x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+
+        if cfg.family in ("dense", "moe"):
+            gemma = cfg.name.startswith("gemma")
+            if cfg.alt_local_global:
+
+                def body(x, inp):
+                    lp, lc = inp
+                    x, c1 = _dense_layer_decode(
+                        lp["local"], x, lc["local"], pos, cfg, cfg.window, True
+                    )
+                    x, c2 = _dense_layer_decode(
+                        lp["global"], x, lc["global"], pos, cfg, None, True
+                    )
+                    return x, {"local": c1, "global": c2}
+
+            else:
+
+                def body(x, inp):
+                    lp, lc = inp
+                    return _dense_layer_decode(lp, x, lc, pos, cfg, cfg.window, gemma)
+
+            x, cache = jax.lax.scan(body, x, (params["layers"], cache), unroll=unroll)
+        elif cfg.family == "ssm":
+
+            def body(x, inp):
+                lp, lc = inp
+                return _rwkv_layer_decode(lp, x, lc, cfg)
+
+            x, cache = jax.lax.scan(body, x, (params["layers"], cache), unroll=unroll)
+        elif cfg.family == "hybrid":
+            new_mamba, new_shared = [], []
+            for gi, (s, e) in enumerate(self.groups):
+                sub_p = jax.tree_util.tree_map(lambda a: a[s:e], params["layers"])
+                sub_c = jax.tree_util.tree_map(lambda a: a[s:e], cache["mamba"])
+
+                def body(x, inp):
+                    lp, lc = inp
+                    return _mamba_layer_decode(lp, x, lc, cfg)
+
+                x, sub_c = jax.lax.scan(body, x, (sub_p, sub_c), unroll=unroll)
+                new_mamba.append(sub_c)
+                site_cache = jax.tree_util.tree_map(
+                    lambda a: a[gi], cache["shared_attn"]
+                )
+                x, site_cache = _dense_layer_decode(
+                    params["shared_attn"], x, site_cache, pos, cfg, None, False
+                )
+                new_shared.append(site_cache)
+            cache = {
+                "mamba": jax.tree_util.tree_map(
+                    lambda *xs: jnp.concatenate(xs, axis=0), *new_mamba
+                ),
+                "shared_attn": jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs, axis=0), *new_shared
+                ),
+            }
+
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps,
+                     plus_one=cfg.name.startswith("gemma"))
+        return self._unembed(params, x), cache

@@ -1,0 +1,102 @@
+"""Parameter/initializer helpers and elementary layers (flax-free).
+
+Parameters are nested dicts of jnp arrays.  Sharding is *path-based*: leaf key
+names are globally meaningful (``q_proj``, ``expert_w1``, ...) and
+``repro/distributed/sharding.py`` maps them to PartitionSpecs — the MaxText
+"logical axis" idea without a module system.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[name]
+
+
+def dense_param(key, in_dim: int, out_dim: int, dtype, scale: float | None = None):
+    """Truncated-normal fan-in init (LM standard)."""
+    std = scale if scale is not None else in_dim**-0.5
+    w = jax.random.truncated_normal(key, -3.0, 3.0, (in_dim, out_dim), jnp.float32) * std
+    return w.astype(dtype)
+
+
+def embed_param(key, vocab: int, dim: int, dtype):
+    w = jax.random.truncated_normal(key, -3.0, 3.0, (vocab, dim), jnp.float32)
+    return w.astype(dtype)
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6, plus_one: bool = False) -> jnp.ndarray:
+    """RMSNorm in fp32 (gemma uses (1 + scale))."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    s = scale.astype(jnp.float32)
+    y = y * (1.0 + s) if plus_one else y * s
+    return y.astype(x.dtype)
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """Mean-centred LayerNorm in fp32 (whisper)."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(
+    x: jnp.ndarray,  # (..., L, D) — heads folded into leading dims
+    positions: jnp.ndarray,  # (..., L) or (L,)
+    theta: float = 10_000.0,
+    mode: str = "full",  # full | half | none
+) -> jnp.ndarray:
+    """Neox-style rotate-half RoPE; ``half`` rotates only the first D/2 dims
+    (ChatGLM's 2D rotary)."""
+    if mode == "none":
+        return x
+    d = x.shape[-1]
+    rot_d = d if mode == "full" else d // 2
+    freqs = jnp.asarray(rope_freqs(rot_d, theta))  # (rot_d/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., L, rot_d/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+
+    xr = x[..., :rot_d].astype(jnp.float32)
+    x1, x2 = xr[..., : rot_d // 2], xr[..., rot_d // 2 :]
+    rotated = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    out = jnp.concatenate([rotated, x[..., rot_d:].astype(jnp.float32)], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, dim: int) -> np.ndarray:
+    """Whisper-style sinusoidal absolute positional embedding table."""
+    log_timescale = np.log(10_000.0) / (dim // 2 - 1)
+    inv = np.exp(-log_timescale * np.arange(dim // 2, dtype=np.float32))
+    scaled = np.arange(length, dtype=np.float32)[:, None] * inv[None, :]
+    return np.concatenate([np.sin(scaled), np.cos(scaled)], axis=1).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+def glu_act(gate: jnp.ndarray, up: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "swiglu":
+        return jax.nn.silu(gate) * up
+    if kind == "geglu":
+        return jax.nn.gelu(gate, approximate=True) * up
+    raise ValueError(kind)
+
+
+def softcap(x: jnp.ndarray, cap: float | None) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x.astype(jnp.float32) / cap).astype(x.dtype)

@@ -1,0 +1,33 @@
+"""Minimal optax-style optimizer substrate (flax/optax are not available offline).
+
+Provides AdamW with:
+  * schedule functions (linear/cosine with warmup),
+  * global-norm gradient clipping,
+  * optional fp32 master copies for bf16 parameter training (LM trainer),
+  * a gradient-transformation interface: ``init(params) -> state``,
+    ``update(grads, state, params) -> (updates, state)`` where
+    ``new_params = params + updates``.
+"""
+from repro.optim.adamw import (
+    AdamWConfig,
+    AdamWState,
+    adamw_init,
+    adamw_update,
+    apply_updates,
+    clip_by_global_norm,
+    global_norm,
+)
+from repro.optim.schedules import constant_schedule, cosine_warmup_schedule, linear_anneal
+
+__all__ = [
+    "AdamWConfig",
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "apply_updates",
+    "clip_by_global_norm",
+    "global_norm",
+    "constant_schedule",
+    "cosine_warmup_schedule",
+    "linear_anneal",
+]

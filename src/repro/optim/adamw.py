@@ -1,0 +1,104 @@
+"""AdamW with global-norm clipping and optional fp32 master weights."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import pytree_dataclass
+
+
+@pytree_dataclass(meta_fields=("b1", "b2", "eps", "weight_decay", "max_grad_norm"))
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    max_grad_norm: float | None = None
+
+
+@pytree_dataclass
+class AdamWState:
+    step: jnp.ndarray  # () int32
+    mu: dict  # first moment, same tree as params (fp32)
+    nu: dict  # second moment (fp32)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def clip_by_global_norm(tree, max_norm: float) -> tuple:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, tree), norm
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+    return AdamWState(step=jnp.int32(0), mu=zeros, nu=jax.tree_util.tree_map(jnp.copy, zeros))
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    params,
+    lr: jnp.ndarray | float | Callable[[jnp.ndarray], jnp.ndarray],
+    config: AdamWConfig = AdamWConfig(),
+):
+    """Returns (updates, new_state, grad_norm).  new_params = params + updates.
+
+    Moments are fp32 regardless of grad dtype; updates are cast back to the
+    parameter dtype (so bf16 params + fp32 moments works out of the box).
+    """
+    step = state.step + 1
+    lr_t = lr(step) if callable(lr) else lr
+
+    if config.max_grad_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, config.max_grad_norm)
+    else:
+        gnorm = global_norm(grads)
+
+    b1, b2 = config.b1, config.b2
+
+    def moment_update(g, mu, nu):
+        g32 = g.astype(jnp.float32)
+        mu_n = b1 * mu + (1 - b1) * g32
+        nu_n = b2 * nu + (1 - b2) * jnp.square(g32)
+        return mu_n, nu_n
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_mu = treedef.flatten_up_to(state.mu)
+    flat_nu = treedef.flatten_up_to(state.nu)
+    new_mu, new_nu = [], []
+    for g, m, n in zip(flat_g, flat_mu, flat_nu):
+        m2, n2 = moment_update(g, m, n)
+        new_mu.append(m2)
+        new_nu.append(n2)
+    mu_t = jax.tree_util.tree_unflatten(treedef, new_mu)
+    nu_t = jax.tree_util.tree_unflatten(treedef, new_nu)
+
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def make_update(m, n, p):
+        mhat = m / bc1
+        nhat = n / bc2
+        upd = -lr_t * (
+            mhat / (jnp.sqrt(nhat) + config.eps)
+            + config.weight_decay * p.astype(jnp.float32)
+        )
+        return upd.astype(p.dtype)
+
+    updates = jax.tree_util.tree_map(make_update, mu_t, nu_t, params)
+    return updates, AdamWState(step=step, mu=mu_t, nu=nu_t), gnorm
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: p + u, params, updates)

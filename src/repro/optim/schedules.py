@@ -1,0 +1,31 @@
+"""Learning-rate schedules (step -> lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def linear_anneal(lr: float, total_steps: int):
+    """PureJaxRL-style linear anneal to 0 (paper Table 3: 'annealed')."""
+
+    def fn(step):
+        frac = 1.0 - jnp.minimum(step.astype(jnp.float32) / total_steps, 1.0)
+        return jnp.float32(lr) * frac
+
+    return fn
+
+
+def cosine_warmup_schedule(peak_lr: float, warmup_steps: int, total_steps: int, final_frac: float = 0.1):
+    """Linear warmup then cosine decay to final_frac * peak (LM pretraining)."""
+
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip((s - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac * peak_lr + (1 - final_frac) * peak_lr * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup_steps, warm, cos)
+
+    return fn

@@ -1,0 +1,16 @@
+"""RL substrate: PureJaxRL-style PPO, baselines, evaluation (paper §5)."""
+from repro.rl.ppo import PPOConfig, make_train, make_ppo_policy
+from repro.rl.baselines import BASELINES, max_charge_policy, random_policy
+from repro.rl.eval import evaluate
+from repro.rl import networks
+
+__all__ = [
+    "PPOConfig",
+    "make_train",
+    "make_ppo_policy",
+    "BASELINES",
+    "max_charge_policy",
+    "random_policy",
+    "evaluate",
+    "networks",
+]

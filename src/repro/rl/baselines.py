@@ -1,0 +1,55 @@
+"""Rule-based baselines (paper §5: 'always charge to maximum potential')."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.env import ChargaxEnv
+
+
+def max_charge_policy(env: ChargaxEnv):
+    """Paper's baseline: max level at every EVSE, battery idle."""
+    d = env.config.discretization
+    a = jnp.full((env.num_action_heads,), 2 * d, dtype=jnp.int32).at[-1].set(d)
+
+    def policy(params, key, obs):
+        return jnp.broadcast_to(a, obs.shape[:-1] + a.shape)
+
+    return policy
+
+
+def random_policy(env: ChargaxEnv):
+    def policy(params, key, obs):
+        return jax.random.randint(
+            key, obs.shape[:-1] + (env.num_action_heads,), 0, env.num_actions_per_head
+        )
+
+    return policy
+
+
+def price_threshold_policy(env: ChargaxEnv, low_frac: float = 0.4):
+    """Heuristic: full charge when the current price is in the cheap band,
+    half rate otherwise; battery charges when cheap, discharges when expensive.
+    Uses only observation features (current price vs 4h-ahead mean)."""
+    d = env.config.discretization
+
+    def policy(params, key, obs):
+        p_now = obs[..., -3]
+        p_mean4 = obs[..., -1]
+        cheap = p_now < (1.0 - low_frac * 0.5) * p_mean4
+        port_level = jnp.where(cheap, 2 * d, int(1.5 * d))
+        batt_level = jnp.where(cheap, 2 * d, 0)
+        ports = jnp.broadcast_to(
+            port_level[..., None], obs.shape[:-1] + (env.n_evse,)
+        )
+        batt = batt_level[..., None]
+        return jnp.concatenate([ports, batt], axis=-1).astype(jnp.int32)
+
+    return policy
+
+
+BASELINES = {
+    "max_charge": max_charge_policy,
+    "random": random_policy,
+    "price_threshold": price_threshold_policy,
+}

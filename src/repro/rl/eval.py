@@ -1,0 +1,54 @@
+"""Policy evaluation harness: vectorised full-episode rollouts with metrics."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.env import ChargaxEnv
+from repro.core.state import EnvParams
+
+
+def evaluate(
+    env: ChargaxEnv,
+    policy,  # (params, key, obs) -> action
+    policy_params,
+    key: jax.Array,
+    num_episodes: int = 16,
+    env_params: EnvParams | None = None,
+) -> dict:
+    """Run ``num_episodes`` full episodes in parallel; return mean metrics."""
+    env_params = env_params if env_params is not None else env.default_params
+
+    @jax.jit
+    def run(key):
+        keys = jax.random.split(key, num_episodes)
+        obs, state = jax.vmap(env.reset, in_axes=(0, None))(keys, env_params)
+
+        def step_fn(carry, _):
+            obs, state, key, ep_reward = carry
+            key, k_act, k_step = jax.random.split(key, 3)
+            action = policy(policy_params, k_act, obs)
+            step_keys = jax.random.split(k_step, num_episodes)
+            obs, state, reward, done, info = jax.vmap(
+                env.step, in_axes=(0, 0, 0, None)
+            )(step_keys, state, action, env_params)
+            return (obs, state, key, ep_reward + reward), None
+
+        (obs, state, _, ep_reward), _ = jax.lax.scan(
+            step_fn, (obs, state, key, jnp.zeros(num_episodes)), None,
+            env.config.episode_steps,
+        )
+        return {
+            "episode_reward": ep_reward.mean(),
+            "episode_reward_std": ep_reward.std(),
+            "daily_profit": state.profit_cum.mean(),
+            "energy_delivered_kwh": state.energy_delivered.mean(),
+            "cars_served": state.cars_served.mean(),
+            "cars_rejected": state.cars_rejected.mean(),
+            "missing_kwh": state.missing_kwh_cum.mean(),
+            "overtime_steps": state.overtime_steps_cum.mean(),
+        }
+
+    return {k: float(v) for k, v in run(key).items()}

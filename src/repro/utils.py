@@ -1,0 +1,71 @@
+"""Small shared utilities: pytree dataclasses, unit constants, tree math."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, TypeVar
+
+import jax
+
+_T = TypeVar("_T")
+
+# ---------------------------------------------------------------------------
+# Units
+# ---------------------------------------------------------------------------
+MINUTES_PER_DAY = 24 * 60
+
+
+def steps_per_day(dt_minutes: float) -> int:
+    return int(round(MINUTES_PER_DAY / dt_minutes))
+
+
+# ---------------------------------------------------------------------------
+# Pytree dataclasses
+# ---------------------------------------------------------------------------
+def pytree_dataclass(cls: type[_T] | None = None, *, meta_fields: tuple[str, ...] = ()):
+    """A frozen dataclass registered as a JAX pytree.
+
+    ``meta_fields`` are static (hashable, not traced); everything else is data.
+    """
+
+    def wrap(c):
+        c = dataclasses.dataclass(frozen=True)(c)
+        data_fields = tuple(
+            f.name for f in dataclasses.fields(c) if f.name not in meta_fields
+        )
+        jax.tree_util.register_dataclass(
+            c, data_fields=data_fields, meta_fields=tuple(meta_fields)
+        )
+        return c
+
+    if cls is None:
+        return wrap
+    return wrap(cls)
+
+
+def replace(obj: _T, **kwargs: Any) -> _T:
+    """dataclasses.replace that reads nicely at call sites."""
+    return dataclasses.replace(obj, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Global scan-unroll context (FLOP-probe compiles unroll ALL internal scans so
+# XLA cost analysis counts every iteration — see analysis/roofline.py)
+# ---------------------------------------------------------------------------
+import contextlib
+
+_UNROLL_SCANS = False
+
+
+def unroll_scans_enabled() -> bool:
+    return _UNROLL_SCANS
+
+
+@contextlib.contextmanager
+def unroll_scans(enabled: bool = True):
+    global _UNROLL_SCANS
+    prev = _UNROLL_SCANS
+    _UNROLL_SCANS = enabled
+    try:
+        yield
+    finally:
+        _UNROLL_SCANS = prev

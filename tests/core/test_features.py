@@ -1,0 +1,110 @@
+"""Paper optional features: V2G discharging, delta action mode, scenarios."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ChargaxEnv, EnvConfig, RewardWeights
+from repro.utils import replace
+
+
+def _plugged_state(env, key, soc=0.8):
+    _, state = env.reset(key)
+    n = env.n_evse
+    occ = jnp.ones((n,), jnp.float32)
+    return replace(
+        state,
+        occupied=occ,
+        soc=occ * soc,
+        e_remain=occ * 20.0,
+        t_remain=jnp.full((n,), 50, jnp.int32),
+        cap=occ * 60.0,
+        rbar=occ * 200.0,
+        rhat=occ * 200.0,
+        tau=occ * 0.8,
+        user_type=occ * 0.0,
+    )
+
+
+def test_v2g_discharging_feeds_grid():
+    """allow_v2g: min action level discharges cars; energy flows to grid."""
+    env = ChargaxEnv(EnvConfig(allow_v2g=True))
+    state = _plugged_state(env, jax.random.key(0))
+    a = jnp.zeros((env.num_action_heads,), jnp.int32)  # level 0 = -100%
+    a = a.at[-1].set(env.config.discretization)  # battery idle
+    _, s2, r, _, info = env.step(jax.random.key(1), state, a)
+    assert float(info["e_net"]) < 0  # net energy OUT of cars
+    assert float(info["e_grid_net"]) < 0  # pushed into the grid
+    # SoC dropped on (still-plugged) discharged cars
+    assert bool(jnp.all(s2.soc[s2.occupied > 0.5] < 0.8))
+
+
+def test_no_v2g_blocks_discharge():
+    env = ChargaxEnv(EnvConfig(allow_v2g=False))
+    state = _plugged_state(env, jax.random.key(0))
+    a = jnp.zeros((env.num_action_heads,), jnp.int32)
+    a = a.at[-1].set(env.config.discretization)
+    _, s2, _, _, info = env.step(jax.random.key(1), state, a)
+    assert float(info["e_net"]) >= 0.0
+
+
+def test_battery_discharge_offsets_grid_draw():
+    """Station battery discharging reduces net grid energy (peak shaving)."""
+    env = ChargaxEnv(EnvConfig(battery=True))
+    state = _plugged_state(env, jax.random.key(0), soc=0.3)
+    d = env.config.discretization
+    charge_only = jnp.full((env.num_action_heads,), 2 * d, jnp.int32).at[-1].set(d)
+    with_batt = charge_only.at[-1].set(0)  # battery full discharge
+    _, _, _, _, i1 = env.step(jax.random.key(1), state, charge_only)
+    _, _, _, _, i2 = env.step(jax.random.key(1), state, with_batt)
+    assert float(i2["e_grid_net"]) < float(i1["e_grid_net"])
+
+
+def test_delta_action_mode_accumulates():
+    """Paper's additive formulation: I(t) = clip(I(t-1) + a)."""
+    env = ChargaxEnv(EnvConfig(action_mode="delta"))
+    state = _plugged_state(env, jax.random.key(0), soc=0.3)
+    d = env.config.discretization
+    # +50% of Imax each step on port 0, hold elsewhere
+    a = jnp.full((env.num_action_heads,), d, jnp.int32).at[0].set(d + d // 2)
+    _, s1, _, _, _ = env.step(jax.random.key(1), state, a)
+    i_first = float(s1.evse_current[0])
+    assert i_first > 0
+    s1 = replace(s1, t_remain=jnp.maximum(s1.t_remain, 10))  # keep car plugged
+    _, s2, _, _, _ = env.step(jax.random.key(2), s1, a)
+    # current accumulated (until clipped by car curve / port limit)
+    assert float(s2.evse_current[0]) >= i_first - 1e-3
+
+
+@pytest.mark.parametrize("scenario", ["highway", "residential", "work", "shopping"])
+@pytest.mark.parametrize("traffic", ["low", "high"])
+def test_all_bundled_scenarios_run(scenario, traffic):
+    env = ChargaxEnv(EnvConfig(scenario=scenario, traffic=traffic))
+    key = jax.random.key(0)
+    obs, state = env.reset(key)
+    step = jax.jit(env.step)
+    for _ in range(24):
+        key, ka, ks = jax.random.split(key, 3)
+        obs, state, r, _, _ = step(ks, state, env.sample_action(ka))
+    assert bool(jnp.isfinite(obs).all()) and bool(jnp.isfinite(r))
+
+
+@pytest.mark.parametrize("arch", ["single_ac_16", "single_dc_16", "mixed_8_8", "deep_4x4"])
+def test_all_bundled_architectures_run(arch):
+    env = ChargaxEnv(EnvConfig(architecture=arch))
+    obs, state = env.reset(jax.random.key(0))
+    _, s2, r, _, _ = env.step(jax.random.key(1), state, env.sample_action(jax.random.key(2)))
+    assert bool(jnp.isfinite(r))
+
+
+def test_reward_weights_sweep_no_recompile():
+    """alpha sweeps ride through params — same jitted step (paper flexibility)."""
+    env = ChargaxEnv(EnvConfig())
+    step = jax.jit(env.step, static_argnums=())
+    p1 = env.make_params(weights=RewardWeights(satisfaction_time=0.0))
+    p2 = env.make_params(weights=RewardWeights(satisfaction_time=5.0, rejected=2.0))
+    _, state = env.reset(jax.random.key(0))
+    a = env.sample_action(jax.random.key(1))
+    _, _, r1, _, _ = step(jax.random.key(2), state, a, p1)
+    _, _, r2, _, _ = step(jax.random.key(2), state, a, p2)
+    assert np.isfinite(float(r1)) and np.isfinite(float(r2))

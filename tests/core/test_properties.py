@@ -1,0 +1,112 @@
+"""Hypothesis property tests for Chargax invariants (DESIGN.md §9)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ChargaxEnv, EnvConfig
+from repro.core.transition import charge_rate, constraint_scale
+
+jax.config.update("jax_platform_name", "cpu")
+
+_ENV = ChargaxEnv(EnvConfig())
+_PARAMS = _ENV.default_params
+_STEP = jax.jit(_ENV.step)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 5 invariant: after enforcement, every node budget is satisfied
+# ---------------------------------------------------------------------------
+@settings(max_examples=50, deadline=None)
+@given(
+    data=st.data(),
+    n_leaves=st.integers(2, 12),
+    n_nodes=st.integers(1, 6),
+)
+def test_constraint_always_satisfied(data, n_leaves, n_nodes):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31 - 1)))
+    member = np.zeros((n_nodes, n_leaves), np.float32)
+    member[0] = 1.0  # root holds all leaves
+    for i in range(1, n_nodes):
+        member[i] = rng.random(n_leaves) < 0.5
+    budget = rng.uniform(0.5, 50.0, n_nodes).astype(np.float32)
+    currents = rng.uniform(-100.0, 100.0, n_leaves).astype(np.float32)
+
+    scale, _ = constraint_scale(jnp.asarray(currents), jnp.asarray(member), jnp.asarray(budget))
+    scaled = currents * np.asarray(scale)
+    loads = member @ np.abs(scaled)
+    assert np.all(loads <= budget * (1 + 1e-4) + 1e-5)
+    # scaling never amplifies or flips a current
+    assert np.all(np.abs(scaled) <= np.abs(currents) + 1e-6)
+    assert np.all(np.sign(scaled) * np.sign(currents) >= 0)
+
+
+# ---------------------------------------------------------------------------
+# Charging curve properties
+# ---------------------------------------------------------------------------
+@settings(max_examples=100, deadline=None)
+@given(
+    soc=st.floats(0.0, 1.0),
+    rbar=st.floats(0.1, 500.0),
+    tau=st.floats(0.05, 0.95),
+)
+def test_charge_rate_bounds(soc, rbar, tau):
+    r = float(charge_rate(jnp.float32(soc), jnp.float32(rbar), jnp.float32(tau)))
+    assert -1e-4 <= r <= rbar * (1 + 1e-5)
+    if soc <= tau:
+        np.testing.assert_allclose(r, rbar, rtol=1e-6)  # bulk region
+
+
+# ---------------------------------------------------------------------------
+# Full-step invariants under random actions
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), steps=st.integers(1, 30))
+def test_step_invariants(seed, steps):
+    key = jax.random.key(seed)
+    _, state = _ENV.reset(key)
+    for _ in range(steps):
+        key, ka, ks = jax.random.split(key, 3)
+        action = _ENV.sample_action(ka)
+        obs, state, r, d, info = _STEP(ks, state, action)
+
+    # SoC bounded
+    assert bool(jnp.all((state.soc >= 0) & (state.soc <= 1)))
+    assert 0.0 <= float(state.batt_soc) <= 1.0
+    # remaining request never negative
+    assert bool(jnp.all(state.e_remain >= 0))
+    # unoccupied ports carry no car state / current
+    empty = state.occupied < 0.5
+    assert bool(jnp.all(jnp.where(empty, jnp.abs(state.evse_current), 0.0) == 0))
+    assert bool(jnp.all(jnp.where(empty, state.cap, 0.0) == 0))
+    # finite numerics everywhere
+    assert bool(jnp.isfinite(obs).all())
+    assert bool(jnp.isfinite(r))
+    # post-enforcement loads satisfy every node budget (Eq. 5)
+    leaf = jnp.concatenate([state.evse_current, state.batt_current[None]])
+    loads = _PARAMS.member @ jnp.abs(leaf)
+    assert bool(jnp.all(loads <= _PARAMS.node_budget * 1.0001 + 1e-4))
+
+
+# ---------------------------------------------------------------------------
+# Exogenous/endogenous factorisation (Eq. 4): the exogenous stream does not
+# depend on actions — same key, different actions => same arrivals & prices.
+# ---------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_exogenous_independent_of_actions(seed):
+    key = jax.random.key(seed)
+    _, s0 = _ENV.reset(key)
+    ka = jax.random.key(seed + 1)
+
+    a_max = jnp.full((_ENV.num_action_heads,), 2 * _ENV.config.discretization, jnp.int32)
+    a_min = jnp.full((_ENV.num_action_heads,), _ENV.config.discretization, jnp.int32)
+
+    _, s1, _, _, i1 = _STEP(ka, s0, a_max)
+    _, s2, _, _, i2 = _STEP(ka, s0, a_min)
+
+    # same arrival count, same prices, same day — regardless of action
+    np.testing.assert_allclose(i1["arrived"], i2["arrived"])
+    np.testing.assert_allclose(i1["price_buy"], i2["price_buy"])
+    assert int(s1.day) == int(s2.day)
+    np.testing.assert_allclose(s1.price_buy, s2.price_buy)

@@ -1,0 +1,72 @@
+"""Unit tests for the station-tree flattening."""
+import numpy as np
+import pytest
+
+from repro.core import station
+
+
+def test_single_type_layout():
+    lay = station.single_charger_type(8, dc=True)
+    assert lay.n_evse == 8
+    assert lay.n_nodes == 1
+    assert lay.member.shape == (1, 8)
+    assert np.all(lay.member == 1.0)
+    assert np.all(lay.evse_is_dc == 1.0)
+    # undersized grid: root cap < sum of port caps
+    assert lay.node_limit[0] < lay.evse_max_current.sum()
+
+
+def test_paper_16_layout():
+    lay = station.multi_charger_type(10, 6)
+    assert lay.n_evse == 16
+    assert lay.n_nodes == 3  # root + per-type splitters
+    # root contains every leaf
+    assert np.all(lay.member[0] == 1.0)
+    # the two type splitters partition the leaves
+    assert np.all(lay.member[1] + lay.member[2] == 1.0)
+    assert lay.member[1].sum() == 10  # DC group
+    assert np.all(lay.evse_is_dc[:10] == 1.0)
+    assert np.all(lay.evse_is_dc[10:] == 0.0)
+
+
+def test_deep_split_nesting():
+    lay = station.deep_split(4, 4)
+    assert lay.n_evse == 16
+    assert lay.n_nodes == 5
+    for g in range(1, 5):
+        assert lay.member[g].sum() == 4
+    # nested: every group leaf is also a root leaf
+    assert np.all((lay.member[1:].sum(axis=0) == 1.0))
+
+
+def test_path_efficiency_is_product():
+    lay = station.multi_charger_type(2, 2)
+    # root eta=0.98, group eta=0.99, port eta=0.95
+    expected = 0.98 * 0.99 * 0.95
+    np.testing.assert_allclose(lay.evse_path_eff, expected, rtol=1e-6)
+
+
+def test_custom_tree():
+    root = station.Node(
+        max_current=100.0,
+        efficiency=0.97,
+        children=[
+            station.Node(max_current=40.0, children=[station.ac_evse(), station.ac_evse()]),
+            station.dc_evse(),
+        ],
+    )
+    lay = station.flatten_tree(root)
+    assert lay.n_evse == 3
+    assert lay.n_nodes == 2
+    assert lay.member[0].sum() == 3
+    assert lay.member[1].sum() == 2
+
+
+def test_empty_tree_raises():
+    with pytest.raises(ValueError):
+        station.flatten_tree(station.Node(max_current=10.0, children=[]))
+
+
+def test_max_power():
+    assert station.ac_evse().max_power_kw == pytest.approx(11.08, abs=0.05)
+    assert station.dc_evse().max_power_kw == pytest.approx(150.0)

@@ -1,0 +1,120 @@
+"""Fused Chargax station-step kernel vs oracles.
+
+Three-way agreement is required:
+  1. Pallas kernel (interpret mode) == jnp reference (`ref.fused_step_ref`)
+  2. jnp reference == the core transition functions (`apply_actions` +
+     `charge_cars`) on real env states — proving the fused path is the same
+     MDP, not a lookalike.
+Plus a hypothesis sweep asserting the Eq. 5 invariant on the kernel output.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ChargaxEnv, EnvConfig
+from repro.core.transition import apply_actions, charge_cars, decode_action
+from repro.kernels.chargax_step import ops as fused_ops
+from repro.kernels.chargax_step import ref as fused_ref
+from repro.utils import replace
+
+ENV = ChargaxEnv(EnvConfig())
+PARAMS = ENV.default_params
+DT = ENV.config.dt_hours
+N = ENV.n_evse
+
+
+def _random_state(key, n_occupied=10):
+    """Random mid-episode env state with plugged cars."""
+    ks = jax.random.split(key, 8)
+    _, state = ENV.reset(ks[0])
+    occ = (jnp.arange(N) < n_occupied).astype(jnp.float32)
+    soc = jax.random.uniform(ks[1], (N,), minval=0.05, maxval=0.95) * occ
+    cap = (40.0 + 60.0 * jax.random.uniform(ks[2], (N,))) * occ
+    return replace(
+        state,
+        occupied=occ,
+        soc=soc,
+        e_remain=jax.random.uniform(ks[3], (N,), minval=0.0, maxval=40.0) * occ,
+        t_remain=(jax.random.randint(ks[4], (N,), 1, 100) * occ).astype(jnp.int32),
+        cap=cap,
+        rbar=(50.0 + 250.0 * jax.random.uniform(ks[5], (N,))) * occ,
+        tau=(0.6 + 0.3 * jax.random.uniform(ks[6], (N,))) * occ,
+        user_type=(jax.random.uniform(ks[7], (N,)) < 0.5).astype(jnp.float32) * occ,
+        batt_soc=jnp.float32(0.5),
+    )
+
+
+def _random_targets(key):
+    k1, k2 = jax.random.split(key)
+    t_evse = jax.random.uniform(k1, (N,), minval=0.0, maxval=1.0) * PARAMS.evse_max_current
+    t_batt = jax.random.uniform(k2, (), minval=-1.0, maxval=1.0) * PARAMS.batt_max_current
+    return t_evse, t_batt
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_ref_matches_core_transition(seed):
+    """fused ref == apply_actions + charge_cars on the same state."""
+    key = jax.random.key(seed)
+    state = _random_state(key)
+    t_evse, t_batt = _random_targets(jax.random.key(seed + 100))
+
+    applied = apply_actions(PARAMS, state, t_evse, t_batt, DT)
+    charged = charge_cars(PARAMS, state, applied, DT)
+
+    out = fused_ops.fused_step(PARAMS, state, t_evse, t_batt, DT, impl="ref")
+
+    np.testing.assert_allclose(out.current[:N], applied.evse_current, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(out.current[N], applied.batt_current, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(out.excess, applied.constraint_excess, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(out.soc[:N], charged.state.soc, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(out.soc[N], charged.state.batt_soc, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(out.e_remain[:N], charged.state.e_remain, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(out.rhat[:N], charged.state.rhat, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(out.e_pole[:N], charged.e_car, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(out.e_pole[N], charged.e_batt_net, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("seed", range(3))
+@pytest.mark.parametrize("batch", [1, 64, 300])
+def test_kernel_matches_ref(seed, batch):
+    """Pallas (interpret) == jnp ref on batched random states."""
+    keys = jax.random.split(jax.random.key(seed), batch)
+    states = jax.vmap(_random_state)(keys)
+    t_evse, t_batt = jax.vmap(_random_targets)(keys)
+
+    out_k = fused_ops.fused_step(
+        PARAMS, states, t_evse, t_batt, DT, impl="interpret", block_envs=64
+    )
+    out_r = fused_ops.fused_step(PARAMS, states, t_evse, t_batt, DT, impl="ref")
+    for a, b, name in zip(out_k, out_r, fused_ref.FusedOut._fields):
+        # fp32 op-ordering differs between the MXU dot and the jnp matmul
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-4, atol=2e-4, err_msg=name
+        )
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_kernel_constraint_invariant(seed):
+    """Eq. 5 holds on kernel outputs for arbitrary states/targets."""
+    key = jax.random.key(seed)
+    state = _random_state(key, n_occupied=16)
+    t_evse, t_batt = _random_targets(jax.random.key(seed ^ 0x5EED))
+    out = fused_ops.fused_step(
+        PARAMS, state, t_evse, t_batt, DT, impl="interpret", block_envs=1,
+    )
+    leaf = out.current[: N + 1]
+    loads = PARAMS.member @ jnp.abs(leaf)
+    assert bool(jnp.all(loads <= PARAMS.node_budget * 1.0001 + 1e-4))
+    assert bool(jnp.all((out.soc >= 0) & (out.soc <= 1)))
+
+
+def test_fused_step_dtypes_float32_only():
+    """State slabs are fp32 end-to-end (env semantics are fp32)."""
+    state = _random_state(jax.random.key(9))
+    t_evse, t_batt = _random_targets(jax.random.key(10))
+    out = fused_ops.fused_step(PARAMS, state, t_evse, t_batt, DT, impl="ref")
+    for leaf in out:
+        assert leaf.dtype == jnp.float32

@@ -1,0 +1,120 @@
+"""Flash attention kernel vs jnp oracle — shape/dtype/feature sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ref
+from repro.kernels.flash_attention.ops import flash_attention
+
+
+def _rand_qkv(key, b, hq, hkv, lq, lk, d, dtype):
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, hq, lq, d), dtype)
+    k = jax.random.normal(kk, (b, hkv, lk, d), dtype)
+    v = jax.random.normal(kv, (b, hkv, lk, d), dtype)
+    return q, k, v
+
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize(
+    "b,hq,hkv,lq,lk,d",
+    [
+        (1, 2, 2, 128, 128, 64),  # square MHA, sub-128 head dim (padded)
+        (2, 4, 2, 256, 256, 128),  # GQA group=2
+        (1, 8, 1, 128, 384, 128),  # MQA, rectangular (decode-ish chunk)
+        (1, 2, 2, 130, 200, 80),  # unaligned lengths exercise padding
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_matches_ref_causal(b, hq, hkv, lq, lk, d, dtype):
+    q, k, v = _rand_qkv(jax.random.key(0), b, hq, hkv, lq, lk, d, dtype)
+    out = flash_attention(q, k, v, causal=True, impl="interpret")
+    expected = ref.mha_reference(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        out.astype(np.float32), expected.astype(np.float32), atol=TOL[dtype], rtol=TOL[dtype]
+    )
+
+
+def test_flash_non_causal():
+    q, k, v = _rand_qkv(jax.random.key(1), 1, 2, 2, 128, 256, 64, jnp.float32)
+    out = flash_attention(q, k, v, causal=False, impl="interpret")
+    expected = ref.mha_reference(q, k, v, causal=False)
+    np.testing.assert_allclose(out, expected, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("window", [64, 128, 300])
+def test_flash_sliding_window(window):
+    q, k, v = _rand_qkv(jax.random.key(2), 1, 2, 2, 256, 256, 64, jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=window, impl="interpret")
+    expected = ref.mha_reference(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(out, expected, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_softcap():
+    q, k, v = _rand_qkv(jax.random.key(3), 1, 4, 2, 128, 128, 128, jnp.float32)
+    out = flash_attention(q, k, v, causal=True, softcap=50.0, impl="interpret")
+    expected = ref.mha_reference(q, k, v, causal=True, softcap=50.0)
+    np.testing.assert_allclose(out, expected, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_decode_alignment():
+    """Lq < Lk with queries aligned to the end (KV-cache decode chunk)."""
+    q, k, v = _rand_qkv(jax.random.key(4), 2, 2, 2, 128, 512, 64, jnp.float32)
+    out = flash_attention(q, k, v, causal=True, impl="interpret")
+    expected = ref.mha_reference(q, k, v, causal=True)  # same default offset
+    np.testing.assert_allclose(out, expected, atol=2e-5, rtol=2e-5)
+    # row 0 of q attends exactly to cols [0, Lk-Lq]
+    mask = ref.attention_mask(128, 512, causal=True)
+    assert bool(mask[0, 384]) and not bool(mask[0, 385])
+
+
+def test_gradients_flow_through_wrapper():
+    q, k, v = _rand_qkv(jax.random.key(5), 1, 2, 1, 64, 64, 32, jnp.float32)
+
+    def loss(q, k, v, impl):
+        return jnp.sum(flash_attention(q, k, v, causal=True, impl=impl) ** 2)
+
+    g_int = jax.grad(loss, argnums=(0, 1, 2))(q, k, v, "interpret")
+    g_ref = jax.grad(loss, argnums=(0, 1, 2))(q, k, v, "ref")
+    for a, b_ in zip(g_int, g_ref):
+        np.testing.assert_allclose(a, b_, atol=1e-4, rtol=1e-4)
+
+
+def test_block_size_invariance():
+    q, k, v = _rand_qkv(jax.random.key(6), 1, 2, 2, 256, 256, 64, jnp.float32)
+    o1 = flash_attention(q, k, v, impl="interpret", block_q=128, block_k=128)
+    o2 = flash_attention(q, k, v, impl="interpret", block_q=64, block_k=256)
+    np.testing.assert_allclose(o1, o2, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize(
+    "b,hq,hkv,lq,lk,window,softcap",
+    [
+        (1, 2, 2, 128, 128, None, None),
+        (2, 4, 2, 200, 333, None, None),  # unaligned + GQA
+        (1, 2, 2, 256, 256, 100, None),
+        (1, 4, 2, 128, 128, None, 50.0),
+        (2, 2, 2, 64, 512, None, None),  # decode alignment
+    ],
+)
+def test_blocked_jnp_matches_naive(b, hq, hkv, lq, lk, window, softcap):
+    """The blocked online-softmax execution path == dense oracle."""
+    q, k, v = _rand_qkv(jax.random.key(7), b, hq, hkv, lq, lk, 64, jnp.float32)
+    out = ref.mha_blocked_jnp(q, k, v, causal=True, window=window, softcap=softcap, block_k=96)
+    expected = ref.mha_reference(q, k, v, causal=True, window=window, softcap=softcap)
+    np.testing.assert_allclose(out, expected, atol=2e-5, rtol=2e-5)
+
+
+def test_blocked_jnp_gradients_match_naive():
+    q, k, v = _rand_qkv(jax.random.key(8), 1, 2, 1, 96, 96, 32, jnp.float32)
+
+    def loss(f, q, k, v):
+        return jnp.sum(f(q, k, v, causal=True) ** 2)
+
+    g_blk = jax.grad(lambda *a: loss(ref.mha_blocked_jnp, *a), argnums=(0, 1, 2))(q, k, v)
+    g_ref = jax.grad(lambda *a: loss(ref.mha_reference, *a), argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(g_blk, g_ref):
+        np.testing.assert_allclose(a, b_, atol=1e-4, rtol=1e-4)

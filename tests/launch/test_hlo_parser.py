@@ -1,0 +1,39 @@
+"""HLO collective-parser unit tests (the §Roofline third-term source)."""
+from repro.analysis.hlo import collective_stats
+
+
+HLO = """
+HloModule test
+ENTRY main {
+  %p0 = bf16[16,128]{1,0} parameter(0)
+  %ag = bf16[16,2048]{1,0} all-gather(%p0), dimensions={1}
+  %ar = f32[256,256]{1,0} all-reduce(%x), to_apply=%add
+  %rs = f32[16,64]{1,0} reduce-scatter(%y), dimensions={1}
+  %a2a = bf16[8,128]{1,0} all-to-all(%z), dimensions={0}
+  %cp-start = bf16[4,4]{1,0} collective-permute-start(%w)
+  %cp-done = bf16[4,4]{1,0} collective-permute-done(%cp-start)
+  %tup = (f32[128]{0}, f32[64]{0}) all-reduce(%a, %b), to_apply=%add
+}
+"""
+
+
+def test_collective_stats_counts_and_bytes():
+    s = collective_stats(HLO)
+    assert s["all-gather"]["count"] == 1
+    assert s["all-gather"]["bytes"] == 16 * 2048 * 2
+    assert s["all-reduce"]["count"] == 2  # plain + tuple
+    assert s["all-reduce"]["bytes"] == 256 * 256 * 4 + (128 + 64) * 4
+    assert s["reduce-scatter"]["bytes"] == 16 * 64 * 4
+    assert s["all-to-all"]["bytes"] == 8 * 128 * 2
+    # -start counted once, -done skipped
+    assert s["collective-permute"]["count"] == 1
+    assert s["total_count"] == 6
+    assert s["total_bytes"] == sum(
+        v["bytes"] for k, v in s.items() if isinstance(v, dict)
+    )
+
+
+def test_empty_hlo():
+    s = collective_stats("ENTRY main { ROOT %r = f32[2]{0} parameter(0) }")
+    assert s["total_count"] == 0
+    assert s["total_bytes"] == 0

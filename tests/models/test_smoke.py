@@ -1,0 +1,138 @@
+"""Per-architecture smoke tests (assignment requirement).
+
+For every assigned arch: instantiate the REDUCED same-family config, run one
+forward and one train step on CPU, assert output shapes + no NaNs.  For a
+representative subset, additionally check decode==train per-position logits
+(the strongest cache-correctness probe).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_IDS, build_model, get_config
+from repro.optim import AdamWConfig, adamw_init, adamw_update, apply_updates
+
+B, L = 2, 32
+
+
+def _data(key, cfg):
+    kt, kf = jax.random.split(key)
+    tokens = jax.random.randint(kt, (B, L), 0, cfg.vocab)
+    labels = jnp.roll(tokens, -1, axis=1)
+    frames = (
+        jax.random.normal(kf, (B, cfg.enc_seq, cfg.d_model), jnp.float32)
+        if cfg.family == "encdec"
+        else None
+    )
+    return tokens, labels, frames
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finiteness(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    tokens, labels, frames = _data(jax.random.key(1), cfg)
+
+    if cfg.family == "encdec":
+        logits, aux = model.apply_train(params, tokens, frames)
+    else:
+        logits, aux = model.apply_train(params, tokens)
+    assert logits.shape == (B, L, cfg.vocab)
+    assert logits.dtype == jnp.float32
+    assert bool(jnp.isfinite(logits).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_one_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    tokens, labels, frames = _data(jax.random.key(1), cfg)
+
+    if cfg.family == "encdec":
+        loss_fn = lambda p: model.loss(p, tokens, labels, frames)[0]
+    else:
+        loss_fn = lambda p: model.loss(p, tokens, labels)[0]
+
+    loss0, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+    assert bool(jnp.isfinite(loss0))
+    gnorm_leaves = [jnp.abs(g).max() for g in jax.tree_util.tree_leaves(grads)]
+    assert all(bool(jnp.isfinite(g)) for g in gnorm_leaves)
+
+    opt = adamw_init(params)
+    updates, opt, gn = adamw_update(grads, opt, params, 1e-3, AdamWConfig(max_grad_norm=1.0))
+    params = apply_updates(params, updates)
+    loss1 = jax.jit(loss_fn)(params)
+    assert bool(jnp.isfinite(loss1))
+    # a single step on random data should reduce loss (lr small, fresh init)
+    assert float(loss1) < float(loss0) + 0.5
+
+
+@pytest.mark.parametrize(
+    "arch",
+    ["tinyllama-1.1b", "gemma2-9b", "qwen3-moe-30b-a3b", "rwkv6-3b", "zamba2-1.2b"],
+)
+def test_decode_matches_train(arch):
+    """Sequential decode with cache reproduces the teacher-forced logits."""
+    import dataclasses
+
+    cfg = get_config(arch, smoke=True)
+    if cfg.family == "moe":
+        # train-path MoE drops tokens over expert capacity; decode is exact
+        # top-k.  For the equivalence check disable dropping.
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    tokens, _, _ = _data(jax.random.key(1), cfg)
+    seq = 8
+    tokens = tokens[:, :seq]
+
+    logits_train, _ = model.apply_train(params, tokens, remat=False)
+
+    cache = model.init_cache(B, seq)
+    step = jax.jit(model.decode_step)
+    outs = []
+    for t in range(seq):
+        lg, cache = step(params, cache, tokens[:, t : t + 1], jnp.int32(t))
+        outs.append(lg[:, 0])
+    logits_dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(logits_dec), np.asarray(logits_train), rtol=2e-3, atol=2e-3
+    )
+
+
+def test_whisper_decode_matches_train():
+    cfg = get_config("whisper-base", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    tokens, _, frames = _data(jax.random.key(1), cfg)
+    seq = 8
+    tokens = tokens[:, :seq]
+
+    enc_out = model.encode(params, frames)
+    logits_train = model.decode_train(params, tokens, enc_out)
+
+    cache = model.init_cache(params, B, seq, enc_out)
+    step = jax.jit(model.decode_step)
+    outs = []
+    for t in range(seq):
+        lg, cache = step(params, cache, tokens[:, t : t + 1], jnp.int32(t))
+        outs.append(lg[:, 0])
+    logits_dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(logits_dec), np.asarray(logits_train), rtol=2e-3, atol=2e-3
+    )
+
+
+def test_moe_expert_utilisation():
+    """Top-k routing touches many experts; aux loss near 1 for balanced load."""
+    cfg = get_config("qwen3-moe-30b-a3b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    tokens = jax.random.randint(jax.random.key(2), (B, 32), 0, cfg.vocab)
+    _, aux = model.apply_train(params, tokens)
+    # Switch aux loss is ~1.0 under uniform routing
+    assert 0.5 < float(aux) / cfg.n_layers < 2.0
