@@ -1,0 +1,92 @@
+"""Fleet throughput: heterogeneous multi-station rollouts under one vmap.
+
+Measures env-steps/sec of a ``FleetEnv`` mixing three heterogeneous bundled
+architectures (``paper_16``, ``deep_4x4``, ``single_dc_8``), each paired
+with a different catalog scenario, replicated to fleets of increasing size —
+the "millions of users" scaling axis of the ROADMAP.  A jitted 24h
+``lax.scan`` rollout is timed per fleet size and a machine-readable JSON
+summary line (``FLEET_JSON {...}``) is emitted for dashboards/CI.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import EnvConfig, FleetEnv
+
+ARCHS = ("paper_16", "deep_4x4", "single_dc_8")
+SCENARIOS = ("shopping_pv_tou", "work_solar_summer", "highway_demand_charge")
+
+
+def bench_fleet(n_replicas: int, n_days: int = 1) -> tuple[float, FleetEnv]:
+    """Seconds for a jitted ``n_days``-day rollout of the replicated fleet."""
+    fleet = FleetEnv(
+        ARCHS * n_replicas,
+        EnvConfig(),
+        scenarios=SCENARIOS * n_replicas,
+    )
+    params = fleet.default_params
+    steps = fleet.config.episode_steps * n_days
+
+    @jax.jit
+    def rollout(key, state):
+        def body(carry, _):
+            key, state = carry
+            key, ka, ks = jax.random.split(key, 3)
+            action = jax.random.randint(
+                ka,
+                (fleet.n_stations, fleet.num_action_heads),
+                0,
+                fleet.num_actions_per_head,
+            )
+            _, state, r, _, _ = fleet.step(ks, state, action, params)
+            return (key, state), jnp.sum(r)
+
+        (_, state), rs = jax.lax.scan(body, (key, state), None, steps)
+        return state, rs.sum()
+
+    key = jax.random.key(0)
+    _, state = fleet.reset(key, params)
+    state2, _ = rollout(key, state)  # compile
+    jax.block_until_ready(state2.t)
+    t0 = time.perf_counter()
+    _, total = rollout(key, state)
+    jax.block_until_ready(total)
+    return time.perf_counter() - t0, fleet
+
+
+def run(quick: bool = True):
+    """Benchmark-harness entry point: list of (name, us_per_call, derived)."""
+    sizes = (1, 4) if quick else (1, 4, 16, 64)
+    rows = []
+    summary = []
+    for n in sizes:
+        secs, fleet = bench_fleet(n)
+        steps = fleet.config.episode_steps * fleet.n_stations
+        sps = steps / secs
+        rows.append(
+            (
+                f"fleet_{fleet.n_stations}_stations",
+                secs * 1e6 / fleet.config.episode_steps,
+                f"{sps:.0f} station-steps/s ({fleet.max_evse}-lane padded)",
+            )
+        )
+        summary.append(
+            {
+                "n_stations": fleet.n_stations,
+                "architectures": list(fleet.architectures),
+                "padded_evse": fleet.max_evse,
+                "steps_per_sec": round(sps, 1),
+                "seconds_per_24h_rollout": round(secs, 4),
+            }
+        )
+    print("FLEET_JSON " + json.dumps({"fleet_throughput": summary}), flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run(quick=True):
+        print(",".join(str(x) for x in row))

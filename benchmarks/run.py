@@ -17,6 +17,7 @@ MODULES = {
     "ppo": ("benchmarks.ppo_shopping", "Fig 4a: PPO vs max-charge baseline"),
     "satisfaction": ("benchmarks.satisfaction_sweep", "Fig 4b/c: alpha sweep"),
     "shift": ("benchmarks.price_shift", "Fig 5: price-year distribution shift"),
+    "fleet": ("benchmarks.fleet_throughput", "Fleet: heterogeneous stations, one vmap"),
     "roofline": ("benchmarks.roofline_report", "dry-run + roofline tables"),
 }
 
@@ -28,6 +29,9 @@ def main():
     args = ap.parse_args()
 
     names = list(MODULES) if args.only is None else args.only.split(",")
+    unknown = [n for n in names if n not in MODULES]
+    if unknown:
+        ap.error(f"unknown benchmark(s) {unknown}; choose from {list(MODULES)}")
     print("name,us_per_call,derived")
     failures = 0
     for name in names:

@@ -1,11 +1,14 @@
 """Chargax core: the paper's contribution as a composable JAX module."""
 from repro.core.env import ChargaxEnv, EnvConfig, make_baseline_max_action
+from repro.core.fleet import FleetEnv, stack_params
 from repro.core.state import EnvParams, EnvState, RewardWeights
 from repro.core import station, datasets, transition, rewards
 
 __all__ = [
     "ChargaxEnv",
     "EnvConfig",
+    "FleetEnv",
+    "stack_params",
     "EnvParams",
     "EnvState",
     "RewardWeights",

@@ -54,6 +54,10 @@ class EnvConfig:
     battery: bool = True
     # observation
     obs_price_horizon_hours: float = 4.0
+    # fleet padding: pad the station to this many EVSEs/nodes (0 = no padding)
+    # so heterogeneous stations share one array shape and one jit cache entry
+    pad_evse: int = 0
+    pad_nodes: int = 0
 
     @property
     def steps_per_day(self) -> int:
@@ -82,6 +86,12 @@ class ChargaxEnv:
                     layout.battery, enabled=self.config.battery
                 ),
             )
+        if self.config.pad_evse or self.config.pad_nodes:
+            layout = station.pad_layout(
+                layout,
+                max(self.config.pad_evse, layout.n_evse),
+                max(self.config.pad_nodes, layout.n_nodes),
+            )
         self.layout = layout
         self.n_evse = layout.n_evse
 
@@ -96,17 +106,28 @@ class ChargaxEnv:
         self,
         weights: RewardWeights | None = None,
         price_year: int | None = None,
-        traffic: str | None = None,
+        traffic: str | float | None = None,
+        profile: str | None = None,
+        price_region: str | None = None,
+        car_region: str | None = None,
     ) -> EnvParams:
+        """Build the numeric parameter pytree.
+
+        The keyword overrides select different bundled datasets without a new
+        env (all results share one shape, so sweeps never recompile); the
+        scenario subsystem (:mod:`repro.scenarios`) layers PV/tariff/seasonal
+        arrays on top of the result with plain ``replace``.
+        """
         cfg, lay = self.config, self.layout
+        profile = profile or cfg.scenario
         prices = datasets.price_profile(
-            cfg.price_region, price_year or cfg.price_year, cfg.dt_minutes
+            price_region or cfg.price_region, price_year or cfg.price_year, cfg.dt_minutes
         )
         arrivals = datasets.arrival_rate_curve(
-            cfg.scenario, traffic or cfg.traffic, cfg.dt_minutes
+            profile, traffic if traffic is not None else cfg.traffic, cfg.dt_minutes
         )
-        cars = datasets.car_table(cfg.car_region)
-        user = datasets.user_profile_params(cfg.scenario)
+        cars = datasets.car_table(car_region or cfg.car_region)
+        user = datasets.user_profile_params(profile)
         stay_mean, stay_sigma = user["stay"]
         # lognormal: E[X] = exp(mu + sigma^2/2) -> mu = log(mean) - sigma^2/2
         stay_mu_log = float(np.log(stay_mean) - 0.5 * stay_sigma**2)
@@ -126,6 +147,7 @@ class ChargaxEnv:
             evse_max_current=jnp.asarray(lay.evse_max_current),
             evse_path_eff=jnp.asarray(lay.evse_path_eff),
             evse_is_dc=jnp.asarray(lay.evse_is_dc),
+            evse_mask=jnp.asarray(lay.mask),
             batt_voltage=jnp.float32(b.voltage),
             batt_max_current=jnp.float32(b.max_current * benabled),
             batt_capacity=jnp.float32(b.capacity_kwh),
@@ -134,6 +156,10 @@ class ChargaxEnv:
             batt_init_soc=jnp.float32(b.init_soc * benabled),
             price_buy_table=jnp.asarray(prices),
             arrival_rate=jnp.asarray(arrivals),
+            arrival_day_scale=jnp.ones((datasets.DAYS_PER_YEAR,), jnp.float32),
+            pv_kw_table=jnp.zeros(
+                (datasets.DAYS_PER_YEAR, cfg.steps_per_day), jnp.float32
+            ),
             car_probs=jnp.asarray(cars[:, 0]),
             car_capacity=jnp.asarray(cars[:, 1]),
             car_ac_kw=jnp.asarray(cars[:, 2]),
@@ -149,6 +175,8 @@ class ChargaxEnv:
             p_sell=jnp.float32(0.75),  # Table 3
             grid_sell_discount=jnp.float32(0.9),
             facility_cost=jnp.float32(0.25),  # EUR per 5-min step
+            demand_charge_rate=jnp.float32(0.0),  # flat tariff by default
+            demand_contract_kw=jnp.float32(0.0),
             moer_scale=jnp.float32(0.4),
             grid_demand_amp=jnp.float32(20.0),
             weights=weights or RewardWeights(),
@@ -257,8 +285,14 @@ class ChargaxEnv:
         arrived = arrive_cars(params, departed.state, k_arr)
 
         # -- reward ---------------------------------------------------------
-        energies = step_energies(params, charged.e_car, charged.e_batt_net)
         spd = state.price_buy.shape[0]
+        e_pv = (
+            params.pv_kw_table[
+                jnp.mod(state.day, params.pv_kw_table.shape[0]), jnp.mod(state.t, spd)
+            ]
+            * dt
+        )
+        energies = step_energies(params, charged.e_car, charged.e_batt_net, e_pv)
         p_buy = state.price_buy[jnp.mod(state.t, spd)]
         reward, pi, pen = compute_reward(
             params,
@@ -272,6 +306,7 @@ class ChargaxEnv:
             charged.e_car,
             state.t,
             state.price_buy,
+            dt,
         )
 
         new_state = replace(
@@ -285,6 +320,7 @@ class ChargaxEnv:
             "reward": reward,
             "e_net": energies.e_net,
             "e_grid_net": energies.e_grid_net,
+            "e_pv": energies.e_pv,
             "constraint_excess": pen.constraint,
             "missing_kwh": pen.satisfaction_time,
             "overtime_steps": departed.overtime_steps,

@@ -1,0 +1,193 @@
+"""FleetEnv — heterogeneous multi-station fleets under one vmap (ROADMAP:
+"as many scenarios as you can imagine", "as fast as the hardware allows").
+
+A fleet is a set of stations with *different* electrical architectures
+(varying ``n_evse``/``n_nodes``) and possibly different scenarios.  Each
+station's :class:`StationLayout` is padded to the fleet-wide maximum shape
+(:func:`repro.core.station.pad_layout`) so every station's parameter pytree
+has identical array shapes; the stacked parameters then run under a single
+``jax.vmap`` of the ordinary :meth:`ChargaxEnv.step` — one compiled program
+for the whole fleet, one jit cache entry regardless of fleet composition.
+
+Padding is inert by construction: padded lanes are masked out of arrivals
+(``EnvParams.evse_mask``), contribute zero current/energy, and — because
+arrival randomness is folded per port index — each fleet lane is bit-for-bit
+the single-station ``ChargaxEnv`` run at the same padded shape, and matches
+an *unpadded* run exactly on discrete fields / to last-ulp float tolerance
+on continuous ones (different compiled programs may round the Eq. 5 load
+reduction differently; see ``tests/core/test_fleet.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import cached_property
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import station
+from repro.core.env import ChargaxEnv, EnvConfig
+from repro.core.state import EnvParams, EnvState, RewardWeights
+
+def stack_params(params_list: Sequence[EnvParams]) -> EnvParams:
+    """Stack same-shape parameter pytrees along a new leading station axis."""
+    structures = {jax.tree_util.tree_structure(p) for p in params_list}
+    if len(structures) != 1:
+        raise ValueError("parameter pytrees have different structures")
+
+    def stack(path, *xs):
+        shapes = {jnp.shape(x) for x in xs}
+        if len(shapes) != 1:
+            raise ValueError(
+                f"cannot stack params: leaf {jax.tree_util.keystr(path)} has "
+                f"per-entry shapes {[jnp.shape(x) for x in xs]}"
+            )
+        return jnp.stack([jnp.asarray(x) for x in xs])
+
+    return jax.tree_util.tree_map_with_path(stack, *params_list)
+
+
+class FleetEnv:
+    """A fleet of heterogeneous charging stations stepped as one batch.
+
+    Args:
+        architectures: station architecture names (keys of
+            ``station.ARCHITECTURES``), one per fleet member.
+        config: shared static configuration (timing, action space, ...).
+            Its ``architecture`` field is ignored; per-station architectures
+            come from ``architectures``.
+        scenarios: optional per-station scenarios — each entry is ``None``
+            (use ``config``'s datasets), a scenario name, or a
+            ``repro.scenarios.Scenario``.  Applied as pure array swaps on the
+            padded per-station params.
+        weights: reward weights shared by the fleet.
+
+    ``reset``/``step`` mirror the single-station API with a leading station
+    axis: obs ``(S, obs_dim)``, reward ``(S,)``, action ``(S, heads)``.
+    ``info`` carries per-station entries plus fleet-aggregated
+    ``fleet_reward``/``fleet_profit``.
+    """
+
+    def __init__(
+        self,
+        architectures: Sequence[str],
+        config: EnvConfig | None = None,
+        scenarios: Sequence[Any] | None = None,
+        weights: RewardWeights | None = None,
+    ):
+        if not architectures:
+            raise ValueError("fleet needs at least one station")
+        if scenarios is not None and len(scenarios) != len(architectures):
+            raise ValueError("need one scenario entry per station")
+        base = config or EnvConfig()
+        self.architectures = tuple(architectures)
+        self.scenarios = tuple(scenarios) if scenarios is not None else None
+
+        # probe the unpadded layouts to find the fleet-wide padded shape
+        layouts = [station.ARCHITECTURES[a]() for a in architectures]
+        self.max_evse = max(l.n_evse for l in layouts)
+        self.max_nodes = max(l.n_nodes for l in layouts)
+        self.envs = [
+            ChargaxEnv(
+                dataclasses.replace(
+                    base,
+                    architecture=a,
+                    pad_evse=self.max_evse,
+                    pad_nodes=self.max_nodes,
+                )
+            )
+            for a in architectures
+        ]
+        # all stations share one padded template: the first env's pure
+        # reset/step close over only static config, shared fleet-wide
+        self.template = self.envs[0]
+        self.config = self.template.config
+        self.weights = weights
+        self._v_reset = jax.vmap(self.template.reset, in_axes=(0, 0))
+        self._v_step = jax.vmap(self.template.step, in_axes=(0, 0, 0, 0))
+
+    # ------------------------------------------------------------------
+    @property
+    def n_stations(self) -> int:
+        return len(self.envs)
+
+    @property
+    def num_action_heads(self) -> int:
+        return self.template.num_action_heads
+
+    @property
+    def num_actions_per_head(self) -> int:
+        return self.template.num_actions_per_head
+
+    @property
+    def obs_dim(self) -> int:
+        return self.template.obs_dim
+
+    @cached_property
+    def default_params(self) -> EnvParams:
+        """Stacked (S, ...) parameter pytree, one slice per station."""
+        if self.scenarios is None:
+            return stack_params(
+                [env.make_params(weights=self.weights) for env in self.envs]
+            )
+        # any scenario in the fleet -> lower EVERY station through the
+        # scenario path (None becomes the config's own world) so all slices
+        # share the scenario-normalised array shapes (padded car tables,
+        # drift tables) and stack cleanly
+        from repro import scenarios as _scen
+
+        cfg = self.config
+        baseline = _scen.Scenario(
+            name="__config__",
+            profile=cfg.scenario,
+            traffic=cfg.traffic,
+            price_region=cfg.price_region,
+            price_year=cfg.price_year,
+            car_region=cfg.car_region,
+        )
+        params = []
+        for i, env in enumerate(self.envs):
+            sc = self.scenarios[i]
+            if sc is None:
+                sc = baseline
+            elif isinstance(sc, str):
+                sc = _scen.make(sc)
+            params.append(sc.make_params(env, weights=self.weights))
+        return stack_params(params)
+
+    def station_params(self, i: int, params: EnvParams | None = None) -> EnvParams:
+        """Slice station ``i``'s (unstacked) params back out of the fleet."""
+        params = params if params is not None else self.default_params
+        return jax.tree_util.tree_map(lambda x: x[i], params)
+
+    def sample_action(self, key: jax.Array) -> jnp.ndarray:
+        return jax.random.randint(
+            key,
+            (self.n_stations, self.num_action_heads),
+            0,
+            self.num_actions_per_head,
+        )
+
+    # ------------------------------------------------------------------
+    def reset(
+        self, key: jax.Array, params: EnvParams | None = None
+    ) -> tuple[jnp.ndarray, EnvState]:
+        params = params if params is not None else self.default_params
+        keys = jax.random.split(key, self.n_stations)
+        return self._v_reset(keys, params)
+
+    def step(
+        self,
+        key: jax.Array,
+        state: EnvState,
+        action: jnp.ndarray,  # (S, heads) int32
+        params: EnvParams | None = None,
+    ) -> tuple[jnp.ndarray, EnvState, jnp.ndarray, jnp.ndarray, dict]:
+        params = params if params is not None else self.default_params
+        keys = jax.random.split(key, self.n_stations)
+        obs, state, reward, done, info = self._v_step(keys, state, action, params)
+        info = dict(info)
+        info["fleet_reward"] = jnp.sum(reward)
+        info["fleet_profit"] = jnp.sum(info["profit"])
+        return obs, state, reward, done, info

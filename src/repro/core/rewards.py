@@ -22,34 +22,54 @@ class StepEnergies(NamedTuple):
     e_grid_in: jnp.ndarray  # bought from grid (>0), efficiency-inflated
     e_grid_out: jnp.ndarray  # sold to grid (<0), efficiency-deflated
     e_batt_net: jnp.ndarray  # battery grid-side energy (signed)
-    e_grid_net: jnp.ndarray  # Eq. 1 total
+    e_grid_net: jnp.ndarray  # Eq. 1 total (net of on-site PV)
+    e_pv: jnp.ndarray  # on-site PV generation this step (>= 0)
 
 
 def step_energies(
-    params: EnvParams, e_car: jnp.ndarray, e_batt: jnp.ndarray
+    params: EnvParams,
+    e_car: jnp.ndarray,
+    e_batt: jnp.ndarray,
+    e_pv: jnp.ndarray | float = 0.0,
 ) -> StepEnergies:
-    """Aggregate per-port car energies (kWh, signed) into Eq. 1 terms."""
+    """Aggregate per-port car energies (kWh, signed) into Eq. 1 terms.
+
+    ``e_pv`` (scenario subsystem) is generation behind the meter: it offsets
+    grid purchases one-for-one and any surplus is exported through the same
+    net-metering term as V2G/battery discharge.
+    """
     e_net = jnp.sum(e_car)
     eff = params.evse_path_eff
     e_grid_in = jnp.sum(jnp.where(e_car > 0, e_car / eff, 0.0))
     e_grid_out = jnp.sum(jnp.where(e_car < 0, e_car * eff, 0.0))
-    e_grid_net = e_grid_in + e_grid_out + e_batt
-    return StepEnergies(e_net, e_grid_in, e_grid_out, e_batt, e_grid_net)
+    e_pv = jnp.asarray(e_pv, jnp.float32)
+    e_grid_net = e_grid_in + e_grid_out + e_batt - e_pv
+    return StepEnergies(e_net, e_grid_in, e_grid_out, e_batt, e_grid_net, e_pv)
 
 
 def profit(
     params: EnvParams,
     energies: StepEnergies,
     p_buy: jnp.ndarray,  # () EUR/kWh this step
+    dt_hours: float,
 ) -> jnp.ndarray:
-    """Eq. 2.  p_sell,grid is a discounted buy price (net sellback)."""
+    """Eq. 2.  p_sell,grid is a discounted buy price (net sellback).
+
+    Scenario tariffs add a demand charge: grid draw above the contracted
+    power (``demand_contract_kw``) is billed at ``demand_charge_rate``
+    EUR per kW per step — the per-step decomposition of a monthly peak fee.
+    """
     p_sell_grid = params.grid_sell_discount * p_buy
     grid_cost = jnp.where(
         energies.e_grid_net > 0,
         p_buy * energies.e_grid_net,
         p_sell_grid * energies.e_grid_net,
     )
-    return params.p_sell * energies.e_net - grid_cost - params.facility_cost
+    demand_kw = jnp.maximum(energies.e_grid_net, 0.0) / dt_hours
+    demand_cost = params.demand_charge_rate * jnp.maximum(
+        demand_kw - params.demand_contract_kw, 0.0
+    )
+    return params.p_sell * energies.e_net - grid_cost - demand_cost - params.facility_cost
 
 
 class PenaltyTerms(NamedTuple):
@@ -92,10 +112,11 @@ def compute_reward(
     e_car: jnp.ndarray,
     t: jnp.ndarray,
     price_buy_day: jnp.ndarray,
+    dt_hours: float,
 ) -> tuple[jnp.ndarray, jnp.ndarray, PenaltyTerms]:
     """Returns (reward, profit, penalties) for one step."""
     w = params.weights
-    pi = profit(params, energies, p_buy)
+    pi = profit(params, energies, p_buy, dt_hours)
 
     pen = PenaltyTerms(
         constraint=constraint_excess,

@@ -42,6 +42,7 @@ class EnvParams:
     evse_max_current: jnp.ndarray  # (n_evse,)
     evse_path_eff: jnp.ndarray  # (n_evse,)
     evse_is_dc: jnp.ndarray  # (n_evse,)
+    evse_mask: jnp.ndarray  # (n_evse,) 1=real lane, 0=fleet padding
     # --- station battery ---
     batt_voltage: jnp.ndarray | float
     batt_max_current: jnp.ndarray | float
@@ -52,7 +53,9 @@ class EnvParams:
     # --- exogenous data tables ---
     price_buy_table: jnp.ndarray  # (365, steps_per_day) EUR/kWh
     arrival_rate: jnp.ndarray  # (steps_per_day,) expected cars / step
-    car_probs: jnp.ndarray  # (n_models,)
+    arrival_day_scale: jnp.ndarray  # (365,) seasonal/weekend arrival modulation
+    pv_kw_table: jnp.ndarray  # (365, steps_per_day) on-site PV generation [kW]
+    car_probs: jnp.ndarray  # (n_models,) or (365, n_models) under fleet drift
     car_capacity: jnp.ndarray  # (n_models,) kWh
     car_ac_kw: jnp.ndarray  # (n_models,)
     car_dc_kw: jnp.ndarray  # (n_models,)
@@ -69,6 +72,8 @@ class EnvParams:
     p_sell: jnp.ndarray | float  # EUR/kWh charged to customers (Table 3: 0.75)
     grid_sell_discount: jnp.ndarray | float  # p_sell,grid = discount * p_buy
     facility_cost: jnp.ndarray | float  # c_dt, EUR per step
+    demand_charge_rate: jnp.ndarray | float  # EUR per kW·step above the contract
+    demand_contract_kw: jnp.ndarray | float  # contracted grid power [kW]
     moer_scale: jnp.ndarray | float  # kgCO2/kWh scale of the synthetic MOER curve
     grid_demand_amp: jnp.ndarray | float  # amplitude of synthetic d_grid
     # --- reward ---

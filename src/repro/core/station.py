@@ -91,10 +91,21 @@ class StationLayout:
     evse_path_eff: np.ndarray  # (n_evse,) product of efficiencies root->leaf
     evse_is_dc: np.ndarray  # (n_evse,) float32 0/1
     battery: BatteryConfig
+    # 0/1 per EVSE: 0 marks a padding lane added by :func:`pad_layout` so
+    # heterogeneous stations can share one array shape (FleetEnv).  ``None``
+    # means "all real" (the common single-station case).
+    evse_mask: np.ndarray | None = None
 
     @property
     def evse_max_power_kw(self) -> np.ndarray:
         return self.evse_voltage * self.evse_max_current / 1000.0
+
+    @property
+    def mask(self) -> np.ndarray:
+        """(n_evse,) float32 0/1 validity mask (ones when unpadded)."""
+        if self.evse_mask is None:
+            return np.ones(self.n_evse, dtype=np.float32)
+        return self.evse_mask
 
 
 def flatten_tree(root: Node, battery: BatteryConfig | None = None) -> StationLayout:
@@ -140,6 +151,52 @@ def flatten_tree(root: Node, battery: BatteryConfig | None = None) -> StationLay
         evse_path_eff=np.array(leaf_path_eff, dtype=np.float32),
         evse_is_dc=np.array([float(l.is_dc) for l in leaves], dtype=np.float32),
         battery=battery or BatteryConfig(enabled=False),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Padding to a common shape (FleetEnv: heterogeneous stations in one vmap)
+# ---------------------------------------------------------------------------
+# Padding a station must be a *no-op* for the dynamics of its real lanes:
+#   * padded EVSE columns are all-zero in ``member`` so they never load a node,
+#   * padded lanes carry ``evse_mask == 0`` so arrivals skip them — they stay
+#     unoccupied forever and their current is forced to 0 by the occupancy
+#     gate in ``apply_actions``,
+#   * padded nodes get an effectively-infinite budget so ``constraint_scale``
+#     treats them as unconstrained,
+#   * electrical constants are padded with 1.0 (not 0.0) so normalisations
+#     like ``current / I_max`` in the observation stay finite.
+_PAD_NODE_BUDGET = 1e9
+
+
+def pad_layout(layout: StationLayout, n_evse: int, n_nodes: int) -> StationLayout:
+    """Pad ``layout`` to ``(n_nodes, n_evse)`` with inert lanes/nodes."""
+    if n_evse < layout.n_evse or n_nodes < layout.n_nodes:
+        raise ValueError(
+            f"cannot pad {layout.n_nodes}x{layout.n_evse} down to {n_nodes}x{n_evse}"
+        )
+    if n_evse == layout.n_evse and n_nodes == layout.n_nodes:
+        return layout
+    pe, pn = n_evse - layout.n_evse, n_nodes - layout.n_nodes
+
+    def pad1(x: np.ndarray, k: int, value: float) -> np.ndarray:
+        return np.concatenate([x, np.full(k, value, dtype=x.dtype)])
+
+    member = np.zeros((n_nodes, n_evse), dtype=np.float32)
+    member[: layout.n_nodes, : layout.n_evse] = layout.member
+    return dataclasses.replace(
+        layout,
+        n_evse=n_evse,
+        n_nodes=n_nodes,
+        member=member,
+        node_limit=pad1(layout.node_limit, pn, _PAD_NODE_BUDGET),
+        node_eff=pad1(layout.node_eff, pn, 1.0),
+        evse_voltage=pad1(layout.evse_voltage, pe, 1.0),
+        evse_max_current=pad1(layout.evse_max_current, pe, 1.0),
+        evse_eff=pad1(layout.evse_eff, pe, 1.0),
+        evse_path_eff=pad1(layout.evse_path_eff, pe, 1.0),
+        evse_is_dc=pad1(layout.evse_is_dc, pe, 0.0),
+        evse_mask=pad1(layout.mask, pe, 0.0),
     )
 
 
@@ -227,4 +284,8 @@ ARCHITECTURES = {
     "paper_16": lambda **kw: multi_charger_type(10, 6, **kw),
     "mixed_8_8": lambda **kw: multi_charger_type(8, 8, **kw),
     "deep_4x4": lambda **kw: deep_split(4, 4, **kw),
+    # smaller sites: varying n_evse/n_nodes exercises FleetEnv shape padding
+    "single_dc_8": lambda **kw: single_charger_type(8, dc=True, **kw),
+    "kiosk_ac_4": lambda **kw: single_charger_type(4, dc=False, **kw),
+    "deep_2x4": lambda **kw: deep_split(2, 4, **kw),
 }

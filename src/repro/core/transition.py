@@ -243,13 +243,17 @@ class ArriveResult(NamedTuple):
 
 def arrive_cars(params: EnvParams, state: EnvState, key: jax.Array) -> ArriveResult:
     n = state.occupied.shape[0]
-    k_m, k_model, k_stay, k_soc0, k_tgt, k_u = jax.random.split(key, 6)
+    k_m, k_port = jax.random.split(key)
 
     spd = params.arrival_rate.shape[0]
-    rate = params.arrival_rate[jnp.mod(state.t, spd)]
+    n_days = params.arrival_day_scale.shape[0]
+    rate = params.arrival_rate[jnp.mod(state.t, spd)] * params.arrival_day_scale[
+        jnp.mod(state.day, n_days)
+    ]
     m = jax.random.poisson(k_m, rate).astype(jnp.int32)
 
-    free = state.occupied < 0.5
+    # padded fleet lanes (evse_mask == 0) never accept cars
+    free = (state.occupied < 0.5) & (params.evse_mask > 0.5)
     n_free = jnp.sum(free.astype(jnp.int32))
     n_arrive = jnp.minimum(m, n_free)
     n_reject = jnp.maximum(m - n_free, 0)
@@ -259,10 +263,31 @@ def arrive_cars(params: EnvParams, state: EnvState, key: jax.Array) -> ArriveRes
     assign = free & (rank <= n_arrive)
     a = assign.astype(jnp.float32)
 
-    # --- car profiles (one draw per port; only assigned ports consume it) ---
-    model = jax.random.choice(
-        k_model, params.car_probs.shape[0], shape=(n,), p=params.car_probs
+    # fleet-mix drift: a (365, n_models) table selects the day's distribution
+    probs = (
+        params.car_probs
+        if params.car_probs.ndim == 1
+        else params.car_probs[jnp.mod(state.day, params.car_probs.shape[0])]
     )
+
+    # --- per-port profile draws (one draw per port; only assigned ports
+    # consume it).  Keys are folded per port index so the draw on port i is
+    # independent of n — padding a station with extra lanes leaves the real
+    # lanes' trajectories bit-for-bit unchanged (FleetEnv regression tests).
+    def draw_port(i):
+        k_model, k_stay, k_soc0, k_tgt, k_u = jax.random.split(
+            jax.random.fold_in(k_port, i), 5
+        )
+        model = jax.random.choice(k_model, probs.shape[0], p=probs)
+        z_stay = jax.random.normal(k_stay, ())
+        soc0 = jax.random.beta(k_soc0, params.soc0_a, params.soc0_b)
+        z_tgt = jax.random.normal(k_tgt, ())
+        bern = jax.random.bernoulli(k_u, params.p_time_sensitive)
+        return model, z_stay, soc0, z_tgt, bern
+
+    model, z_stay, soc0_raw, z_tgt, bern = jax.vmap(draw_port)(jnp.arange(n))
+
+    # --- car profiles --------------------------------------------------------
     cap = params.car_capacity[model]
     tau = params.car_tau[model]
     car_kw = jnp.where(
@@ -271,22 +296,16 @@ def arrive_cars(params: EnvParams, state: EnvState, key: jax.Array) -> ArriveRes
     rbar = car_kw * 1000.0 / params.evse_voltage  # car-side current limit [A]
 
     # --- user profiles -------------------------------------------------------
-    stay_h = jnp.exp(
-        params.stay_mu_log + params.stay_sigma * jax.random.normal(k_stay, (n,))
-    )
+    stay_h = jnp.exp(params.stay_mu_log + params.stay_sigma * z_stay)
     steps_per_hour = spd / 24.0
     stay_steps = jnp.maximum((stay_h * steps_per_hour).astype(jnp.int32), 1)
-    soc0 = jnp.clip(
-        jax.random.beta(k_soc0, params.soc0_a, params.soc0_b, (n,)), 0.02, 0.95
-    )
+    soc0 = jnp.clip(soc0_raw, 0.02, 0.95)
     target = jnp.clip(
-        params.target_soc_mu + params.target_soc_std * jax.random.normal(k_tgt, (n,)),
-        soc0 + 0.05,
-        1.0,
+        params.target_soc_mu + params.target_soc_std * z_tgt, soc0 + 0.05, 1.0
     )
     e_req = (target - soc0) * cap
     # u: 0 = time-sensitive (leaves at deadline), 1 = charge-sensitive
-    u = 1.0 - jax.random.bernoulli(k_u, params.p_time_sensitive, (n,)).astype(jnp.float32)
+    u = 1.0 - bern.astype(jnp.float32)
 
     new_state = replace(
         state,

@@ -24,8 +24,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.analysis.hlo import collective_stats
+from repro.analysis.hlo import collective_stats, cost_analysis_dict
 from repro.core import ChargaxEnv, EnvConfig
+from repro.distributed import sharding
 from repro.rl import PPOConfig, make_train
 
 
@@ -54,14 +55,14 @@ def run_dryrun(args) -> dict:
             num_minibatches=4,
             hidden=(128, 128),
         )
-        with jax.sharding.set_mesh(mesh):
+        with sharding.set_mesh(mesh):
             train = make_train(cfg, env, shard_envs=make_shard_envs(mesh))
             t0 = time.perf_counter()
             lowered = jax.jit(train).lower(jax.random.key(0))
             compiled = lowered.compile()
             wall = time.perf_counter() - t0
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis() or {}
+        cost = cost_analysis_dict(compiled)
         rec = {
             "cell": "chargax-ppo-update",
             "mesh": "2x16x16" if multi_pod else "16x16",

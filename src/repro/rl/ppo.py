@@ -82,11 +82,38 @@ def make_train(
     env: ChargaxEnv,
     env_params: EnvParams | None = None,
     shard_envs: Callable[[jnp.ndarray], jnp.ndarray] | None = None,
+    scenario_params: EnvParams | None = None,
 ) -> Callable[[jax.Array], dict]:
-    """Build the full jitted training function: key -> {runner_state, metrics}."""
-    env_params = env_params if env_params is not None else env.default_params
+    """Build the full jitted training function: key -> {runner_state, metrics}.
+
+    ``scenario_params`` — a stacked ``(S, ...)`` parameter pytree (e.g. from
+    ``scenarios.stack_params``) — trains one agent across a scenario
+    *distribution* for robustness (the paper's distribution-shift setting):
+    the ``num_envs`` parallel environments are assigned scenarios round-robin,
+    so every rollout mixes all S worlds and the minibatches interleave them.
+    """
     n_heads, n_actions = env.num_action_heads, env.num_actions_per_head
     constrain = shard_envs or (lambda x: x)
+
+    if scenario_params is not None:
+        if env_params is not None:
+            raise ValueError("pass either env_params or scenario_params, not both")
+        n_scen = jax.tree_util.tree_leaves(scenario_params)[0].shape[0]
+        if config.num_envs % n_scen != 0:
+            raise ValueError(
+                f"num_envs={config.num_envs} is not a multiple of {n_scen} "
+                "scenarios: round-robin assignment would drop scenarios or "
+                "skew the training mixture; adjust num_envs"
+            )
+        idx = jnp.arange(config.num_envs) % n_scen
+        # per-env parameter slices: leading axis num_envs, vmapped like state
+        env_params = jax.tree_util.tree_map(
+            lambda x: jnp.asarray(x)[idx], scenario_params
+        )
+        params_axis = 0
+    else:
+        env_params = env_params if env_params is not None else env.default_params
+        params_axis = None
 
     lr = (
         linear_anneal(config.lr, config.num_updates * config.update_epochs * config.num_minibatches)
@@ -95,8 +122,8 @@ def make_train(
     )
     opt_cfg = AdamWConfig(max_grad_norm=config.max_grad_norm)
 
-    v_reset = jax.vmap(env.reset, in_axes=(0, None))
-    v_step = jax.vmap(env.step, in_axes=(0, 0, 0, None))
+    v_reset = jax.vmap(env.reset, in_axes=(0, params_axis))
+    v_step = jax.vmap(env.step, in_axes=(0, 0, 0, params_axis))
 
     def policy(params, obs):
         return networks.apply_actor_critic(params, obs, n_heads, n_actions)

@@ -1,0 +1,26 @@
+"""Scenario subsystem: declarative worlds for Chargax stations.
+
+    from repro import scenarios
+    sc = scenarios.make("shopping_pv_tou")      # by name, from the catalog
+    params = sc.make_params(env)                # pure array swap, no recompile
+    fleet = FleetEnv(["paper_16", "deep_4x4"], scenarios=["shopping_flat",
+                                                          "work_solar_summer"])
+
+Every scenario lowers to identically-shaped ``EnvParams`` arrays, so one
+jitted ``env.step`` serves the whole catalog (and any user scenario).
+"""
+from repro.core.fleet import stack_params
+from repro.scenarios.registry import CATALOG, make, names, register
+from repro.scenarios.scenario import MAX_CAR_MODELS, Scenario
+from repro.scenarios import processes
+
+__all__ = [
+    "CATALOG",
+    "MAX_CAR_MODELS",
+    "Scenario",
+    "make",
+    "names",
+    "processes",
+    "register",
+    "stack_params",
+]

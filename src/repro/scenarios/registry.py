@@ -1,0 +1,110 @@
+"""Scenario registry + bundled catalog.
+
+``make("name")`` resolves a scenario by string; ``register`` adds user
+scenarios (e.g. from config files via ``Scenario.from_dict``).  The bundled
+catalog spans the paper's dataset axes (profiles, regions, years, traffic)
+crossed with the new exogenous processes (PV, ToU/demand tariffs, seasonal
+modulation, fleet drift) — every entry lowers to the same parameter shapes,
+so a jitted ``env.step`` runs the whole catalog with one compilation.
+"""
+from __future__ import annotations
+
+from repro.scenarios.scenario import Scenario
+
+_REGISTRY: dict[str, Scenario] = {}
+
+
+def register(scenario: Scenario, overwrite: bool = False) -> Scenario:
+    """Add a scenario to the registry (returned for chaining)."""
+    if not overwrite and scenario.name in _REGISTRY:
+        raise ValueError(f"scenario {scenario.name!r} already registered")
+    _REGISTRY[scenario.name] = scenario
+    return scenario
+
+
+def make(name: str) -> Scenario:
+    """Look a scenario up by name."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def names() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# Bundled catalog
+# ---------------------------------------------------------------------------
+CATALOG = tuple(
+    register(s)
+    for s in [
+        Scenario(
+            name="shopping_flat",
+            description="Baseline: shopping-centre station, flat NL 2021 tariff",
+        ),
+        Scenario(
+            name="shopping_pv_tou",
+            description="Shopping centre with rooftop PV and an evening-peak ToU tariff",
+            pv_peak_kw=150.0,
+            tariff="tou",
+        ),
+        Scenario(
+            name="work_solar_summer",
+            description="Workplace carport PV; summer holiday lull empties it on weekends",
+            profile="work",
+            pv_peak_kw=250.0,
+            season="summer_peak",
+            season_amplitude=0.2,
+            weekend_factor=0.35,
+        ),
+        Scenario(
+            name="highway_demand_charge",
+            description="High-traffic highway plaza billed a demand charge above 400 kW",
+            profile="highway",
+            traffic="high",
+            demand_charge_rate=0.4,
+            demand_contract_kw=400.0,
+        ),
+        Scenario(
+            name="residential_winter_crisis",
+            description="Residential street chargers, DE 2022 crisis prices, winter peak",
+            profile="residential",
+            price_region="DE",
+            price_year=2022,
+            season="winter_peak",
+            season_amplitude=0.3,
+            weekend_factor=1.15,
+        ),
+        Scenario(
+            name="shopping_fleet_drift",
+            description="Shopping baseline with the EU mix drifting to bigger batteries",
+            fleet_drift="big_battery_growth",
+            fleet_drift_strength=1.5,
+        ),
+        Scenario(
+            name="us_workplace_tou",
+            description="US workplace: US car mix, carport PV, ToU with deep overnight valley",
+            profile="work",
+            car_region="US",
+            pv_peak_kw=100.0,
+            tariff="tou",
+            tou_offpeak_mult=0.6,
+            weekend_factor=0.3,
+        ),
+        Scenario(
+            name="world_highway_2023",
+            description="Global-mix highway site on FR 2023 post-crisis prices, summer surge",
+            profile="highway",
+            car_region="World",
+            price_region="FR",
+            price_year=2023,
+            traffic="high",
+            season="summer_peak",
+            weekend_factor=1.25,
+        ),
+    ]
+)

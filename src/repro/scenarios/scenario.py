@@ -1,0 +1,157 @@
+"""Declarative scenarios: one dataclass composes every exogenous process.
+
+A :class:`Scenario` names *what the world looks like* — user profile,
+traffic, price region/year, car mix, PV plant, tariff structure, seasonal
+modulation, fleet drift — while the environment keeps owning *how the world
+evolves*.  ``Scenario.make_params(env)`` lowers the description into an
+:class:`~repro.core.state.EnvParams` pytree whose arrays all have
+scenario-independent shapes:
+
+  * car tables are padded to :data:`MAX_CAR_MODELS` rows (probability 0) so
+    EU/US/World mixes share one shape,
+  * ``car_probs`` is always emitted as a (365, MAX_CAR_MODELS) drift table
+    (constant rows when there is no drift),
+  * PV/tariff/season arrays are always present (zeros/ones when inactive).
+
+Consequently *every* scenario produces the same pytree structure and shapes:
+swapping scenarios at runtime is a pure array swap and never recompiles a
+jitted ``env.step`` (asserted in ``tests/scenarios/test_scenarios.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.env import ChargaxEnv
+from repro.core.state import EnvParams, RewardWeights
+from repro.scenarios import processes
+from repro.utils import replace
+
+# every bundled car table fits in 8 rows; padding rows get probability 0
+MAX_CAR_MODELS = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """Declarative description of one charging-station world."""
+
+    name: str
+    description: str = ""
+    # --- bundled dataset selection (paper Table 1) ---
+    profile: str = "shopping"  # highway|residential|work|shopping
+    traffic: str | float = "medium"  # low|medium|high or cars/day
+    price_region: str = "NL"  # NL|FR|DE
+    price_year: int = 2021
+    car_region: str = "EU"  # EU|US|World
+    # --- solar PV plant ---
+    pv_peak_kw: float = 0.0
+    pv_cloud_noise: float = 0.15
+    pv_seed: int = 23
+    # --- tariff structure ---
+    tariff: str = "flat"  # flat | tou
+    tou_peak_mult: float = 1.6
+    tou_offpeak_mult: float = 0.8
+    demand_charge_rate: float = 0.0  # EUR per kW·step above contract
+    demand_contract_kw: float = 0.0
+    # --- arrival modulation ---
+    season: str = "none"  # none | summer_peak | winter_peak
+    season_amplitude: float = 0.25
+    weekend_factor: float = 1.0
+    # --- fleet-mix drift over the year ---
+    fleet_drift: str = "none"  # none | big_battery_growth
+    fleet_drift_strength: float = 1.0
+
+    # ------------------------------------------------------------------
+    # Serialisation (registry round-trips, config files)
+    # ------------------------------------------------------------------
+    def to_dict(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict[str, Any]) -> "Scenario":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown Scenario fields: {sorted(unknown)}")
+        return cls(**d)
+
+    def evolve(self, **changes: Any) -> "Scenario":
+        """A modified copy (keeps scenario definitions declarative)."""
+        return dataclasses.replace(self, **changes)
+
+    # ------------------------------------------------------------------
+    # Lowering to EnvParams
+    # ------------------------------------------------------------------
+    def make_params(
+        self, env: ChargaxEnv, weights: RewardWeights | None = None
+    ) -> EnvParams:
+        """Lower this scenario onto ``env``'s station (pure array swaps)."""
+        cfg = env.config
+        base = env.make_params(
+            weights=weights,
+            price_year=self.price_year,
+            traffic=self.traffic,
+            profile=self.profile,
+            price_region=self.price_region,
+            car_region=self.car_region,
+        )
+
+        # tariff overlay on the day-ahead curve
+        prices = np.asarray(base.price_buy_table)
+        if self.tariff == "tou":
+            prices = processes.tou_overlay(
+                prices,
+                cfg.dt_minutes,
+                peak_mult=self.tou_peak_mult,
+                offpeak_mult=self.tou_offpeak_mult,
+            )
+        elif self.tariff != "flat":
+            raise ValueError(f"unknown tariff {self.tariff!r}")
+
+        pv = processes.pv_table(
+            self.pv_peak_kw, cfg.dt_minutes, self.pv_cloud_noise, self.pv_seed
+        )
+        day_scale = processes.seasonal_arrival_scale(
+            self.season, self.season_amplitude, self.weekend_factor
+        )
+
+        # car mix: pad to the common model count, then expand to a drift table
+        probs = _pad(np.asarray(base.car_probs), 0.0)
+        cap = _pad(np.asarray(base.car_capacity), 1.0)
+        ac = _pad(np.asarray(base.car_ac_kw), 1.0)
+        dc = _pad(np.asarray(base.car_dc_kw), 1.0)
+        tau = _pad(np.asarray(base.car_tau), 0.5)
+        if self.fleet_drift == "none":
+            probs_end = probs
+        elif self.fleet_drift == "big_battery_growth":
+            probs_end = processes.big_battery_shift(
+                probs, cap, self.fleet_drift_strength
+            )
+        else:
+            raise ValueError(f"unknown fleet_drift {self.fleet_drift!r}")
+        probs_table = processes.fleet_drift_table(probs, probs_end)
+
+        return replace(
+            base,
+            price_buy_table=jnp.asarray(prices),
+            pv_kw_table=jnp.asarray(pv),
+            arrival_day_scale=jnp.asarray(day_scale),
+            car_probs=jnp.asarray(probs_table),
+            car_capacity=jnp.asarray(cap),
+            car_ac_kw=jnp.asarray(ac),
+            car_dc_kw=jnp.asarray(dc),
+            car_tau=jnp.asarray(tau),
+            demand_charge_rate=jnp.float32(self.demand_charge_rate),
+            demand_contract_kw=jnp.float32(self.demand_contract_kw),
+        )
+
+
+def _pad(x: np.ndarray, fill: float) -> np.ndarray:
+    if x.shape[0] > MAX_CAR_MODELS:
+        raise ValueError(f"car table has {x.shape[0]} > {MAX_CAR_MODELS} models")
+    out = np.full(MAX_CAR_MODELS, fill, dtype=np.float32)
+    out[: x.shape[0]] = x
+    return out

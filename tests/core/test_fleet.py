@@ -1,0 +1,199 @@
+"""FleetEnv regression tests: padding is inert, the vmapped fleet step is the
+single-station step, and a jitted 24h fleet rollout runs in one scan."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ChargaxEnv, EnvConfig, FleetEnv
+from repro.core.station import ARCHITECTURES, pad_layout
+
+jax.config.update("jax_platform_name", "cpu")
+
+FLEET_ARCHS = ["paper_16", "deep_4x4", "single_dc_8"]  # 16/16/8 lanes, 3/5/1 nodes
+
+# state fields that must match bit-for-bit between padded/unpadded runs
+_LANE_FIELDS = (
+    "evse_current", "occupied", "soc", "e_remain", "t_remain",
+    "rhat", "cap", "rbar", "tau", "user_type",
+)
+_SCALAR_FIELDS = ("batt_current", "batt_soc", "t", "day")
+
+
+def _assert_lanes_equal(state_pad, state_ref, n, ctx=""):
+    for f in _LANE_FIELDS:
+        a = np.asarray(getattr(state_pad, f))[..., :n]
+        b = np.asarray(getattr(state_ref, f))
+        assert np.array_equal(a, b), f"{ctx}: {f} diverged"
+    for f in _SCALAR_FIELDS:
+        assert np.array_equal(
+            np.asarray(getattr(state_pad, f)), np.asarray(getattr(state_ref, f))
+        ), f"{ctx}: {f} diverged"
+
+
+def test_pad_layout_shapes_and_mask():
+    lay = ARCHITECTURES["deep_4x4"]()
+    padded = pad_layout(lay, 20, 8)
+    assert padded.n_evse == 20 and padded.n_nodes == 8
+    assert padded.member.shape == (8, 20)
+    np.testing.assert_array_equal(padded.member[: lay.n_nodes, : lay.n_evse], lay.member)
+    np.testing.assert_array_equal(padded.mask[: lay.n_evse], 1.0)
+    np.testing.assert_array_equal(padded.mask[lay.n_evse :], 0.0)
+    with pytest.raises(ValueError):
+        pad_layout(lay, lay.n_evse - 1, lay.n_nodes)
+
+
+def test_padded_env_matches_unpadded():
+    """Padding lanes/nodes must not perturb the real lanes' trajectories.
+
+    Discrete fields (occupancy, deadlines, user types, episode clock) must be
+    *identical*; continuous fields are compared at last-ulp tolerance because
+    the Eq. 5 load matmul reduces over a different lane count when padded,
+    which XLA:CPU may vectorise with a different partial-sum grouping.
+    """
+    cfg = EnvConfig(architecture="deep_4x4")
+    env = ChargaxEnv(cfg)
+    envp = ChargaxEnv(dataclasses.replace(cfg, pad_evse=24, pad_nodes=9))
+    n = env.n_evse
+
+    step = jax.jit(env.step)
+    stepp = jax.jit(envp.step)
+    key = jax.random.key(3)
+    _, state = env.reset(key)
+    _, statep = envp.reset(key)
+    action = env.sample_action(jax.random.key(4))
+    # pad the action with battery head kept last
+    actionp = jnp.concatenate(
+        [action[:-1], jnp.full((envp.n_evse - n,), 0, action.dtype), action[-1:]]
+    )
+    # discrete fields and table lookups must be identical; arithmetic-derived
+    # floats (incl. rbar = kW * 1000 / V) go in the tolerance group because
+    # XLA may emit a reciprocal-multiply in one program and a divide in the
+    # other — padded and unpadded envs are different compiled programs.
+    exact = ("occupied", "t_remain", "cap", "tau", "user_type")
+    for i in range(60):
+        k = jax.random.key(1000 + i)
+        obs, state, r, d, info = step(k, state, action)
+        obsp, statep, rp, dp, infop = stepp(k, statep, actionp)
+        for f in exact:
+            assert np.array_equal(
+                np.asarray(getattr(statep, f))[:n], np.asarray(getattr(state, f))
+            ), f"step {i}: {f} diverged"
+        for f in ("evse_current", "soc", "e_remain", "rhat", "rbar"):
+            np.testing.assert_allclose(
+                np.asarray(getattr(statep, f))[:n],
+                np.asarray(getattr(state, f)),
+                rtol=1e-5, atol=1e-5, err_msg=f"step {i}: {f}",
+            )
+        # padded lanes never activate
+        assert np.asarray(statep.occupied)[n:].max() == 0.0
+        assert np.asarray(statep.evse_current)[n:].max() == 0.0
+        np.testing.assert_allclose(float(r), float(rp), rtol=1e-5, atol=1e-5)
+        assert bool(d) == bool(dp)
+
+
+def test_fleet_lane_equals_single_station_env():
+    """Each fleet lane is bit-for-bit the single-station ChargaxEnv run."""
+    fleet = FleetEnv(FLEET_ARCHS)
+    params = fleet.default_params
+    key = jax.random.key(0)
+    fobs, fstate = fleet.reset(key, params)
+    faction = fleet.sample_action(jax.random.key(1))
+    fstep = jax.jit(fleet.step)
+
+    # reference: each station alone, fed the exact per-station key stream
+    refs = []
+    for i, env in enumerate(fleet.envs):
+        p = fleet.station_params(i, params)
+        rk = jax.random.split(key, fleet.n_stations)[i]
+        _, s = env.reset(rk, p)
+        refs.append((env, jax.jit(env.step), p, s))
+
+    for t in range(40):
+        k = jax.random.key(500 + t)
+        fobs, fstate, freward, fdone, finfo = fstep(k, fstate, faction, params)
+        keys = jax.random.split(k, fleet.n_stations)
+        for i, (env, step, p, s) in enumerate(refs):
+            obs, s, r, d, info = step(keys[i], s, faction[i], p)
+            refs[i] = (env, step, p, s)
+            lane = jax.tree_util.tree_map(lambda x: x[i], fstate)
+            _assert_lanes_equal(lane, s, env.n_evse, ctx=f"station {i} step {t}")
+            assert np.array_equal(np.asarray(fobs)[i], np.asarray(obs)), (i, t)
+            assert np.array_equal(float(freward[i]), float(r)), (i, t)
+        assert float(finfo["fleet_reward"]) == pytest.approx(
+            float(jnp.sum(freward)), rel=1e-6
+        )
+
+
+def test_fleet_24h_rollout_single_vmapped_scan():
+    """Acceptance: >= 3 heterogeneous architectures, jitted 24h scan rollout."""
+    fleet = FleetEnv(
+        FLEET_ARCHS,
+        scenarios=["shopping_pv_tou", "work_solar_summer", "highway_demand_charge"],
+    )
+    params = fleet.default_params
+    steps = fleet.config.episode_steps
+
+    @jax.jit
+    def rollout(key):
+        _, state = fleet.reset(key, params)
+
+        def body(carry, _):
+            key, state = carry
+            key, ka, ks = jax.random.split(key, 3)
+            action = jax.random.randint(
+                ka, (fleet.n_stations, fleet.num_action_heads),
+                0, fleet.num_actions_per_head,
+            )
+            _, state, r, d, _ = fleet.step(ks, state, action, params)
+            return (key, state), (r, d)
+
+        (_, state), (rewards, dones) = jax.lax.scan(
+            body, (key, state), None, steps
+        )
+        return state, rewards, dones
+
+    state, rewards, dones = rollout(jax.random.key(9))
+    assert rewards.shape == (steps, fleet.n_stations)
+    assert np.all(np.isfinite(np.asarray(rewards)))
+    assert np.all(np.asarray(dones)[-1])  # every station finishes its day
+    assert np.all(np.asarray(state.t) == steps)
+    # heterogeneity survived padding: per-station EVSE masks differ
+    masks = np.asarray(params.evse_mask)
+    assert masks.shape[0] == 3 and len({int(m.sum()) for m in masks}) >= 2
+
+
+def test_station_params_round_trip():
+    fleet = FleetEnv(FLEET_ARCHS)
+    for i, env in enumerate(fleet.envs):
+        direct = env.make_params()
+        sliced = fleet.station_params(i)
+        jax.tree_util.tree_map(
+            lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+            direct,
+            sliced,
+        )
+
+
+def test_fleet_requires_consistent_inputs():
+    with pytest.raises(ValueError, match="at least one"):
+        FleetEnv([])
+    with pytest.raises(ValueError, match="one scenario entry per station"):
+        FleetEnv(FLEET_ARCHS, scenarios=["shopping_flat"])
+
+
+def test_fleet_mixed_none_and_named_scenarios():
+    """None entries lower through the config's own world and stack cleanly."""
+    fleet = FleetEnv(
+        ["paper_16", "deep_4x4"], scenarios=[None, "shopping_pv_tou"]
+    )
+    params = fleet.default_params
+    # scenario-normalised shapes fleet-wide: drift table + padded car rows
+    assert params.car_probs.ndim == 3  # (S, 365, MAX_CAR_MODELS)
+    _, state = fleet.reset(jax.random.key(0), params)
+    _, state, r, _, _ = fleet.step(
+        jax.random.key(1), state, fleet.sample_action(jax.random.key(2)), params
+    )
+    assert np.all(np.isfinite(np.asarray(r)))

@@ -1,0 +1,213 @@
+"""Scenario subsystem tests: registry round-trips, array shapes/invariants,
+no-recompile guarantee, PV energy conservation under vmap, PPO wiring."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import scenarios
+from repro.core import ChargaxEnv, EnvConfig
+from repro.scenarios import MAX_CAR_MODELS, Scenario, processes
+
+jax.config.update("jax_platform_name", "cpu")
+
+ENV = ChargaxEnv(EnvConfig())
+SPD = ENV.config.steps_per_day
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+def test_catalog_has_at_least_six_scenarios():
+    assert len(scenarios.names()) >= 6
+    for name in scenarios.names():
+        assert scenarios.make(name).name == name
+
+
+def test_make_unknown_name_raises_with_listing():
+    with pytest.raises(KeyError, match="shopping_flat"):
+        scenarios.make("nope_not_a_scenario")
+
+
+def test_register_rejects_duplicates_unless_overwrite():
+    original = scenarios.make("shopping_flat")
+    sc = Scenario(name="shopping_flat")
+    try:
+        with pytest.raises(ValueError, match="already registered"):
+            scenarios.register(sc)
+        assert scenarios.register(sc, overwrite=True) is sc
+    finally:  # restore the catalog entry for other tests / same-process users
+        scenarios.register(original, overwrite=True)
+
+
+def test_scenario_dict_round_trip():
+    for name in scenarios.names():
+        sc = scenarios.make(name)
+        assert Scenario.from_dict(sc.to_dict()) == sc
+
+
+def test_from_dict_rejects_unknown_fields():
+    with pytest.raises(ValueError, match="unknown Scenario fields"):
+        Scenario.from_dict({"name": "x", "wind_turbines": 3})
+
+
+def test_evolve_keeps_declarative_identity():
+    base = scenarios.make("shopping_flat")
+    hot = base.evolve(pv_peak_kw=99.0)
+    assert hot.pv_peak_kw == 99.0 and base.pv_peak_kw == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Lowered array shapes & invariants
+# ---------------------------------------------------------------------------
+def test_all_scenarios_share_param_shapes():
+    shapes = {
+        name: jax.tree_util.tree_map(
+            lambda x: jnp.shape(x), scenarios.make(name).make_params(ENV)
+        )
+        for name in scenarios.names()
+    }
+    first = next(iter(shapes.values()))
+    for name, s in shapes.items():
+        assert s == first, f"{name} deviates from the common shape"
+
+
+def test_scenario_swap_does_not_recompile():
+    step = jax.jit(ENV.step)
+    params = [scenarios.make(n).make_params(ENV) for n in scenarios.names()]
+    _, state = ENV.reset(jax.random.key(0), params[0])
+    action = ENV.sample_action(jax.random.key(1))
+    step(jax.random.key(2), state, action, params[0])
+    n_compiled = step._cache_size()
+    for p in params[1:]:
+        step(jax.random.key(2), state, action, p)
+    assert step._cache_size() == n_compiled
+
+
+def test_pv_table_shape_and_daynight_structure():
+    pv = processes.pv_table(150.0, ENV.config.dt_minutes)
+    assert pv.shape == (365, SPD) and pv.dtype == np.float32
+    assert np.all(pv >= 0.0) and np.max(pv) <= 150.0
+    midnight = pv[:, 0]  # no sun at 00:00 anywhere in the year
+    assert np.all(midnight == 0.0)
+    noon_idx = SPD // 2
+    # summer noon outproduces winter noon (seasonal declination cycle)
+    assert pv[172, noon_idx] > pv[355, noon_idx] > 0.0
+
+
+def test_tou_overlay_moves_peak_and_valley():
+    base = np.ones((365, SPD), np.float32) * 0.10
+    tou = processes.tou_overlay(base, ENV.config.dt_minutes)
+    hour = np.arange(SPD) * 24.0 / SPD
+    peak = (hour > 18.0) & (hour < 20.0)
+    valley = (hour > 1.0) & (hour < 5.0)
+    assert np.all(tou[:, peak] > base[:, peak])
+    assert np.all(tou[:, valley] < base[:, valley])
+
+
+def test_seasonal_scale_weekend_factor():
+    s = processes.seasonal_arrival_scale("summer_peak", 0.2, weekend_factor=0.5)
+    assert s.shape == (365,)
+    day = np.arange(365)
+    weekend = np.isin(day % 7, [5, 6])
+    assert s[weekend].mean() < s[~weekend].mean()
+    with pytest.raises(ValueError):
+        processes.seasonal_arrival_scale("monsoon")
+
+
+def test_fleet_drift_rows_are_distributions_and_shift_capacity():
+    p = scenarios.make("shopping_fleet_drift").make_params(ENV)
+    table = np.asarray(p.car_probs)
+    assert table.shape == (365, MAX_CAR_MODELS)
+    np.testing.assert_allclose(table.sum(axis=1), 1.0, rtol=1e-5)
+    cap = np.asarray(p.car_capacity)
+    mean_cap = table @ cap
+    assert mean_cap[-1] > mean_cap[0]  # drift toward bigger batteries
+
+
+# ---------------------------------------------------------------------------
+# Physics through the env: conservation + economics under vmap
+# ---------------------------------------------------------------------------
+def _rollout_info(params_stacked, n_scen, steps=30):
+    from repro.utils import replace
+
+    v_reset = jax.vmap(ENV.reset, in_axes=(0, 0))
+    v_step = jax.jit(jax.vmap(ENV.step, in_axes=(0, 0, 0, 0)))
+    keys = jax.random.split(jax.random.key(0), n_scen)
+    _, state = v_reset(keys, params_stacked)
+    # start mid-morning so daylight processes (PV) are exercised
+    state = replace(state, t=jnp.full_like(state.t, int(SPD * 10 / 24)))
+    action = jnp.stack([ENV.sample_action(jax.random.key(7))] * n_scen)
+    infos = []
+    for i in range(steps):
+        ks = jax.random.split(jax.random.key(100 + i), n_scen)
+        _, state, _, _, info = v_step(ks, state, action, params_stacked)
+        infos.append(info)
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *infos)
+
+
+def test_pv_conservation_under_vmap():
+    names = list(scenarios.names())
+    params = scenarios.stack_params(
+        [scenarios.make(n).make_params(ENV) for n in names]
+    )
+    info = _rollout_info(params, len(names))
+    # PV appears in the info and only for scenarios that declare a plant
+    pv_by_scen = np.asarray(info["e_pv"]).sum(axis=0)
+    for i, n in enumerate(names):
+        if scenarios.make(n).pv_peak_kw == 0.0:
+            assert pv_by_scen[i] == 0.0
+    assert pv_by_scen.sum() > 0.0  # catalog includes PV scenarios
+    assert np.all(np.asarray(info["e_pv"]) >= 0.0)
+
+
+def test_pv_reduces_net_grid_energy():
+    base = scenarios.make("shopping_flat")
+    solar = base.evolve(name="tmp_solar", pv_peak_kw=200.0)
+    params = scenarios.stack_params(
+        [base.make_params(ENV), solar.make_params(ENV)]
+    )
+    info = _rollout_info(params, 2, steps=SPD // 2)  # first 12h of a day
+    e_net = np.asarray(info["e_grid_net"]).sum(axis=0)
+    assert e_net[1] < e_net[0]
+
+
+def test_demand_charge_lowers_profit():
+    base = scenarios.make("shopping_flat")
+    charged = base.evolve(
+        name="tmp_dc", demand_charge_rate=1.0, demand_contract_kw=0.0
+    )
+    params = scenarios.stack_params(
+        [base.make_params(ENV), charged.make_params(ENV)]
+    )
+    info = _rollout_info(params, 2, steps=20)
+    profit = np.asarray(info["profit"]).sum(axis=0)
+    assert profit[1] < profit[0]
+
+
+# ---------------------------------------------------------------------------
+# PPO wiring: train across a scenario distribution
+# ---------------------------------------------------------------------------
+def test_ppo_trains_across_scenario_distribution():
+    from repro.rl import PPOConfig, make_train
+
+    names = ["shopping_flat", "shopping_pv_tou", "highway_demand_charge"]
+    stacked = scenarios.stack_params(
+        [scenarios.make(n).make_params(ENV) for n in names]
+    )
+    cfg = PPOConfig(
+        total_timesteps=6 * 16, num_envs=6, rollout_steps=16,
+        num_minibatches=2, update_epochs=1, hidden=(16,),
+    )
+    out = jax.jit(make_train(cfg, ENV, scenario_params=stacked))(jax.random.key(0))
+    loss = np.asarray(out["metrics"]["loss"])
+    assert np.all(np.isfinite(loss))
+
+    with pytest.raises(ValueError, match="not both"):
+        make_train(cfg, ENV, env_params=ENV.default_params, scenario_params=stacked)
+
+    # fewer envs than scenarios would silently drop worlds: refuse loudly
+    with pytest.raises(ValueError, match="drop scenarios"):
+        make_train(
+            PPOConfig(num_envs=2, rollout_steps=16), ENV, scenario_params=stacked
+        )
