@@ -1,0 +1,71 @@
+"""Mesh-sharded fleet throughput: the station axis placed over the devices.
+
+Host-count-aware companion to ``benchmarks/fleet_throughput.py``: a data
+mesh is built over EVERY visible device (``launch.mesh.make_data_mesh``),
+the stacked fleet parameters are ``device_put`` onto it, and ``FleetEnv``'s
+ambient-mesh constraints keep the whole jitted 24h rollout sharded — no host
+transfers, the paper's on-device-rollout claim across chips.  Fleet sizes
+scale with the device count so the station axis always divides the mesh.
+
+On 1 device this measures the constraint overhead (~zero: the annotations
+lower to no-ops); under ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+or on a real slice it exercises the multi-device path.  Emits a
+machine-readable ``FLEET_SHARDED_JSON`` line and sets ``LAST_SUMMARY`` for
+``benchmarks/run.py`` to persist as ``BENCH_fleet_sharded.json``.
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+
+from benchmarks.fleet_throughput import bench_fleet
+from repro.launch.mesh import make_data_mesh
+
+LAST_SUMMARY: dict | None = None
+
+
+def bench_sharded_fleet(n_replicas: int, n_days: int = 1):
+    """Seconds for a jitted ``n_days``-day rollout, stations sharded on the mesh."""
+    return bench_fleet(n_replicas, n_days, mesh=make_data_mesh())
+
+
+def run(quick: bool = True):
+    """Benchmark-harness entry point: list of (name, us_per_call, derived)."""
+    global LAST_SUMMARY
+    n_dev = jax.device_count()
+    sizes = (n_dev, 4 * n_dev) if quick else (n_dev, 4 * n_dev, 16 * n_dev)
+    rows = []
+    summary = []
+    for n in sizes:
+        secs, fleet = bench_sharded_fleet(n)
+        steps = fleet.config.episode_steps * fleet.n_stations
+        sps = steps / secs
+        rows.append(
+            (
+                f"fleet_sharded_{fleet.n_stations}_stations",
+                secs * 1e6 / fleet.config.episode_steps,
+                f"{sps:.0f} station-steps/s over {n_dev} device(s)",
+            )
+        )
+        summary.append(
+            {
+                "n_stations": fleet.n_stations,
+                "steps_per_sec": round(sps, 1),
+                "seconds_per_24h_rollout": round(secs, 4),
+            }
+        )
+    LAST_SUMMARY = {
+        "num_envs": summary[-1]["n_stations"],
+        "steps_per_sec": summary[-1]["steps_per_sec"],
+        "device_count": n_dev,
+        "process_count": jax.process_count(),
+        "fleet_sharded": summary,
+    }
+    print("FLEET_SHARDED_JSON " + json.dumps(LAST_SUMMARY), flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run(quick=True):
+        print(",".join(str(x) for x in row))

@@ -20,46 +20,64 @@ from repro.core import EnvConfig, FleetEnv
 ARCHS = ("paper_16", "deep_4x4", "single_dc_8")
 SCENARIOS = ("shopping_pv_tou", "work_solar_summer", "highway_demand_charge")
 
+LAST_SUMMARY: dict | None = None  # set by run(); persisted by benchmarks.run
 
-def bench_fleet(n_replicas: int, n_days: int = 1) -> tuple[float, FleetEnv]:
-    """Seconds for a jitted ``n_days``-day rollout of the replicated fleet."""
+
+def bench_fleet(n_replicas: int, n_days: int = 1, mesh=None) -> tuple[float, FleetEnv]:
+    """Seconds for a jitted ``n_days``-day rollout of the replicated fleet.
+
+    With ``mesh``, the stacked params/state are placed over its data axes and
+    the rollout runs under the ambient mesh (``benchmarks.fleet_sharded``);
+    without, this is the plain single-device harness.
+    """
+    import contextlib
+
+    from repro.distributed import env_sharding, sharding
+
     fleet = FleetEnv(
         ARCHS * n_replicas,
         EnvConfig(),
         scenarios=SCENARIOS * n_replicas,
     )
-    params = fleet.default_params
     steps = fleet.config.episode_steps * n_days
 
-    @jax.jit
-    def rollout(key, state):
-        def body(carry, _):
-            key, state = carry
-            key, ka, ks = jax.random.split(key, 3)
-            action = jax.random.randint(
-                ka,
-                (fleet.n_stations, fleet.num_action_heads),
-                0,
-                fleet.num_actions_per_head,
-            )
-            _, state, r, _, _ = fleet.step(ks, state, action, params)
-            return (key, state), jnp.sum(r)
+    with sharding.set_mesh(mesh) if mesh is not None else contextlib.nullcontext():
+        params = fleet.default_params
+        if mesh is not None:
+            params = env_sharding.place_env_batch(params, mesh)
 
-        (_, state), rs = jax.lax.scan(body, (key, state), None, steps)
-        return state, rs.sum()
+        @jax.jit
+        def rollout(key, state):
+            def body(carry, _):
+                key, state = carry
+                key, ka, ks = jax.random.split(key, 3)
+                action = jax.random.randint(
+                    ka,
+                    (fleet.n_stations, fleet.num_action_heads),
+                    0,
+                    fleet.num_actions_per_head,
+                )
+                _, state, r, _, _ = fleet.step(ks, state, action, params)
+                return (key, state), jnp.sum(r)
 
-    key = jax.random.key(0)
-    _, state = fleet.reset(key, params)
-    state2, _ = rollout(key, state)  # compile
-    jax.block_until_ready(state2.t)
-    t0 = time.perf_counter()
-    _, total = rollout(key, state)
-    jax.block_until_ready(total)
+            (_, state), rs = jax.lax.scan(body, (key, state), None, steps)
+            return state, rs.sum()
+
+        key = jax.random.key(0)
+        _, state = fleet.reset(key, params)
+        if mesh is not None:
+            state = env_sharding.place_env_batch(state, mesh)
+        state2, _ = rollout(key, state)  # compile
+        jax.block_until_ready(state2.t)
+        t0 = time.perf_counter()
+        _, total = rollout(key, state)
+        jax.block_until_ready(total)
     return time.perf_counter() - t0, fleet
 
 
 def run(quick: bool = True):
     """Benchmark-harness entry point: list of (name, us_per_call, derived)."""
+    global LAST_SUMMARY
     sizes = (1, 4) if quick else (1, 4, 16, 64)
     rows = []
     summary = []
@@ -83,6 +101,11 @@ def run(quick: bool = True):
                 "seconds_per_24h_rollout": round(secs, 4),
             }
         )
+    LAST_SUMMARY = {
+        "num_envs": summary[-1]["n_stations"],
+        "steps_per_sec": summary[-1]["steps_per_sec"],
+        "fleet_throughput": summary,
+    }
     print("FLEET_JSON " + json.dumps({"fleet_throughput": summary}), flush=True)
     return rows
 

@@ -5,12 +5,22 @@
 Prints ``name,us_per_call,derived`` CSV rows (assignment format).  --full uses
 paper-scale training budgets; the default quick mode validates the same
 claims with reduced budgets suited to this single-CPU container.
+
+Every benchmark's results are also PERSISTED: ``BENCH_<name>.json`` is
+written to the repo root (git sha, device count, CSV rows, plus whatever
+summary dict the module left in its ``LAST_SUMMARY`` global) so the perf
+trajectory survives the run — CI uploads them as artifacts.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import subprocess
 import sys
 import time
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 MODULES = {
     "speed": ("benchmarks.speed_table", "Table 2 / Fig 1: env + PPO throughput"),
@@ -18,14 +28,55 @@ MODULES = {
     "satisfaction": ("benchmarks.satisfaction_sweep", "Fig 4b/c: alpha sweep"),
     "shift": ("benchmarks.price_shift", "Fig 5: price-year distribution shift"),
     "fleet": ("benchmarks.fleet_throughput", "Fleet: heterogeneous stations, one vmap"),
+    "fleet_sharded": (
+        "benchmarks.fleet_sharded",
+        "Fleet: station axis sharded over the device mesh",
+    ),
     "roofline": ("benchmarks.roofline_report", "dry-run + roofline tables"),
 }
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "HEAD"], cwd=REPO_ROOT, text=True
+        ).strip()
+    except Exception:  # noqa: BLE001
+        return "unknown"
+
+
+def persist(name: str, rows, summary: dict | None, quick: bool) -> str:
+    """Write ``BENCH_<name>.json`` to the repo root; return its path."""
+    import jax
+
+    # summary first so modules can surface headline fields (steps_per_sec,
+    # num_envs) at the top level, but provenance keys always win
+    rec = dict(summary or {})
+    rec.update(
+        benchmark=name,
+        git_sha=_git_sha(),
+        device_count=jax.device_count(),
+        backend=jax.default_backend(),
+        quick=quick,
+        unix_time=int(time.time()),
+        rows=[
+            {"name": r, "us_per_call": round(float(v), 3), "derived": d}
+            for r, v, d in rows
+        ],
+    )
+    path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return path
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument(
+        "--no-persist", action="store_true", help="skip writing BENCH_<name>.json"
+    )
     args = ap.parse_args()
 
     names = list(MODULES) if args.only is None else args.only.split(",")
@@ -43,6 +94,11 @@ def main():
             rows = mod.run(quick=not args.full)
             for rname, val, derived in rows:
                 print(f"{rname},{val:.3f},{derived}", flush=True)
+            if not args.no_persist:
+                path = persist(
+                    name, rows, getattr(mod, "LAST_SUMMARY", None), not args.full
+                )
+                print(f"# wrote {os.path.relpath(path, REPO_ROOT)}", flush=True)
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{name},nan,FAILED: {type(e).__name__}: {e}", flush=True)

@@ -165,8 +165,12 @@ def bench_python_ppo(n_steps: int = 10_000, n_envs: int = 16) -> float:
     return time.perf_counter() - t0
 
 
+LAST_SUMMARY: dict | None = None  # set by run(); persisted by benchmarks.run
+
+
 def run(quick: bool = True) -> list[tuple[str, float, str]]:
     """Returns rows: (name, us_per_env_step, derived)."""
+    global LAST_SUMMARY
     rows = []
     n_jax = 100_000
     n_py = 10_000 if quick else 50_000
@@ -190,6 +194,12 @@ def run(quick: bool = True) -> list[tuple[str, float, str]]:
     rows.append(
         ("ppo16_speedup", (t_pyppo / n_pyppo) / (t_ppo16 / n_ppo), "x faster (paper: 134x-2820x)")
     )
+    LAST_SUMMARY = {
+        "num_envs": 16,
+        "steps_per_sec": round(n_ppo / t_ppo16, 1),
+        "random_env_steps_per_sec": round(n_jax / t_jax, 1),
+        "python_ref_steps_per_sec": round(n_py / t_py, 1),
+    }
     return rows
 
 

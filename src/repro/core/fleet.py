@@ -16,6 +16,12 @@ the single-station ``ChargaxEnv`` run at the same padded shape, and matches
 an *unpadded* run exactly on discrete fields / to last-ulp float tolerance
 on continuous ones (different compiled programs may round the Eq. 5 load
 reduction differently; see ``tests/core/test_fleet.py``).
+
+When a mesh is active (``repro.distributed.sharding.set_mesh``) the station
+axis of ``reset``/``step`` outputs is constrained onto the mesh's data axes
+(``repro.distributed.env_sharding``), so a fleet rollout shards across
+devices with zero changes at the call site; without a mesh the constraint is
+the identity and all single-device tests run unmodified.
 """
 from __future__ import annotations
 
@@ -29,6 +35,7 @@ import jax.numpy as jnp
 from repro.core import station
 from repro.core.env import ChargaxEnv, EnvConfig
 from repro.core.state import EnvParams, EnvState, RewardWeights
+from repro.distributed import env_sharding
 
 def stack_params(params_list: Sequence[EnvParams]) -> EnvParams:
     """Stack same-shape parameter pytrees along a new leading station axis."""
@@ -66,7 +73,12 @@ class FleetEnv:
     ``reset``/``step`` mirror the single-station API with a leading station
     axis: obs ``(S, obs_dim)``, reward ``(S,)``, action ``(S, heads)``.
     ``info`` carries per-station entries plus fleet-aggregated
-    ``fleet_reward``/``fleet_profit``.
+    ``fleet_reward``/``fleet_profit``; every info leaf is uniformly ``(S,)``
+    (aggregates are broadcast), so ``tree_map``-based auto-reset/stacking
+    works when the fleet is nested under an outer vmap or scan.
+
+    ``shard=True`` (default) constrains the station axis of all outputs onto
+    the ambient mesh's data axes — a no-op on a single device.
     """
 
     def __init__(
@@ -75,6 +87,7 @@ class FleetEnv:
         config: EnvConfig | None = None,
         scenarios: Sequence[Any] | None = None,
         weights: RewardWeights | None = None,
+        shard: bool = True,
     ):
         if not architectures:
             raise ValueError("fleet needs at least one station")
@@ -104,8 +117,16 @@ class FleetEnv:
         self.template = self.envs[0]
         self.config = self.template.config
         self.weights = weights
+        self.shard = shard
         self._v_reset = jax.vmap(self.template.reset, in_axes=(0, 0))
         self._v_step = jax.vmap(self.template.step, in_axes=(0, 0, 0, 0))
+
+    def _constrain(self, tree):
+        """Pin the station axis to the ambient mesh's data axes (no-op when
+        no mesh is active or ``shard=False``)."""
+        if not self.shard:
+            return tree
+        return env_sharding.constrain_env_batch(tree)
 
     # ------------------------------------------------------------------
     @property
@@ -175,7 +196,8 @@ class FleetEnv:
     ) -> tuple[jnp.ndarray, EnvState]:
         params = params if params is not None else self.default_params
         keys = jax.random.split(key, self.n_stations)
-        return self._v_reset(keys, params)
+        obs, state = self._v_reset(keys, params)
+        return self._constrain(obs), self._constrain(state)
 
     def step(
         self,
@@ -188,6 +210,12 @@ class FleetEnv:
         keys = jax.random.split(key, self.n_stations)
         obs, state, reward, done, info = self._v_step(keys, state, action, params)
         info = dict(info)
-        info["fleet_reward"] = jnp.sum(reward)
-        info["fleet_profit"] = jnp.sum(info["profit"])
+        # fleet aggregates broadcast to (S,) so every info leaf has a uniform
+        # leading station axis — tree_map stacking under an outer vmap/scan
+        # would otherwise see mixed () / (S,) shapes and fail
+        info["fleet_reward"] = jnp.broadcast_to(jnp.sum(reward), reward.shape)
+        info["fleet_profit"] = jnp.broadcast_to(jnp.sum(info["profit"]), reward.shape)
+        obs, state, reward, done, info = self._constrain(
+            (obs, state, reward, done, info)
+        )
         return obs, state, reward, done, info

@@ -1,5 +1,11 @@
-"""Distribution substrate: sharding rules, train/serve steps, checkpointing,
-gradient compression (DESIGN.md §5)."""
+"""Distribution substrate: sharding rules, env-batch placement, train/serve
+steps, checkpointing, gradient compression (DESIGN.md §5)."""
+from repro.distributed.env_sharding import (
+    constrain_env_batch,
+    env_shardings,
+    make_shard_envs,
+    place_env_batch,
+)
 from repro.distributed.sharding import (
     DP,
     batch_spec,
@@ -22,6 +28,10 @@ from repro.distributed.train_step import (
 __all__ = [
     "DP",
     "batch_spec",
+    "constrain_env_batch",
+    "env_shardings",
+    "make_shard_envs",
+    "place_env_batch",
     "cache_shardings",
     "constrain",
     "data_axes",

@@ -4,28 +4,51 @@
 this module never touches jax device state; the dry-run sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
 import and then builds these meshes from host placeholder devices.
+
+``_make_mesh`` wraps ``jax.make_mesh`` across JAX versions: the
+``axis_types`` kwarg only exists on newer releases, and very old ones lack
+``jax.make_mesh`` entirely (fall back to ``Mesh`` over reshaped devices).
 """
 from __future__ import annotations
 
 import jax
+import numpy as np
+
+
+def _make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    make = getattr(jax, "make_mesh", None)
+    if make is not None:
+        axis_type = getattr(jax.sharding, "AxisType", None)
+        if axis_type is not None:
+            return make(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+        return make(shape, axes)
+    n = int(np.prod(shape))
+    return jax.sharding.Mesh(np.asarray(jax.devices()[:n]).reshape(shape), axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(shape, axes)
 
 
 def make_test_mesh(shape=(2, 4), axes=("data", "model")):
     """Small mesh for CPU integration tests (8 forced host devices)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(shape, axes)
 
 
 def make_single_device_mesh():
-    return jax.make_mesh(
-        (1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
-    )
+    return _make_mesh((1, 1), ("data", "model"))
+
+
+def make_data_mesh(n_model: int = 1):
+    """Host-count-aware mesh over ALL visible devices: data axis = device
+    count // n_model.  This is the mesh env-batch sharding wants — fleet
+    stations / PPO envs over 'data', nothing over 'model' — and it adapts to
+    however many devices the process sees (1 CPU, N forced host devices,
+    a real multi-chip slice).
+    """
+    n_dev = jax.device_count()
+    if n_dev % n_model:
+        raise ValueError(f"device count {n_dev} not divisible by n_model={n_model}")
+    return _make_mesh((n_dev // n_model, n_model), ("data", "model"))

@@ -21,23 +21,15 @@ import json
 import time
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.analysis.hlo import collective_stats, cost_analysis_dict
 from repro.core import ChargaxEnv, EnvConfig
-from repro.distributed import sharding
+from repro.distributed import env_sharding, sharding
 from repro.rl import PPOConfig, make_train
 
-
-def make_shard_envs(mesh):
-    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
-    spec = P(dp if len(dp) > 1 else dp[0], None)
-
-    def constrain(obs):
-        return jax.lax.with_sharding_constraint(obs, NamedSharding(mesh, spec))
-
-    return constrain
+# env-batch constraint now lives in the distributed layer, shared with
+# FleetEnv and the benchmarks
+make_shard_envs = env_sharding.make_shard_envs
 
 
 def run_dryrun(args) -> dict:
@@ -94,10 +86,43 @@ def run_train(args):
         num_envs=args.num_envs,
         rollout_steps=args.rollout,
     )
-    train = jax.jit(make_train(cfg, env))
-    t0 = time.perf_counter()
-    out = train(jax.random.key(args.seed))
-    jax.block_until_ready(out["metrics"]["rollout_reward"])
+    scenario_params = None
+    if args.scenarios:
+        from repro import scenarios as _scen
+
+        names = args.scenarios.split(",")
+        scenario_params = _scen.stack_params(
+            [_scen.make(n).make_params(env) for n in names]
+        )
+        print(f"[ppo] training across {len(names)} scenarios (one table copy each)")
+
+    # multi-device: shard the env batch over a data mesh built from every
+    # visible device; single device degrades to no mesh / no constraints
+    n_dev = jax.device_count()
+    mesh_ctx = None
+    shard_envs = None
+    if n_dev > 1 and cfg.num_envs % n_dev == 0:
+        from repro.launch.mesh import make_data_mesh
+
+        mesh = make_data_mesh()
+        mesh_ctx = sharding.set_mesh(mesh)
+        shard_envs = env_sharding.make_shard_envs(mesh)
+        print(f"[ppo] sharding {cfg.num_envs} envs over {n_dev} devices")
+    elif n_dev > 1:
+        print(
+            f"[ppo] WARNING: num_envs={cfg.num_envs} not divisible by "
+            f"{n_dev} devices — env sharding disabled, running replicated"
+        )
+
+    import contextlib
+
+    with mesh_ctx if mesh_ctx is not None else contextlib.nullcontext():
+        train = jax.jit(
+            make_train(cfg, env, shard_envs=shard_envs, scenario_params=scenario_params)
+        )
+        t0 = time.perf_counter()
+        out = train(jax.random.key(args.seed))
+        jax.block_until_ready(out["metrics"]["rollout_reward"])
     wall = time.perf_counter() - t0
     rr = out["metrics"]["rollout_reward"]
     print(
@@ -111,6 +136,12 @@ def run_train(args):
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--dryrun", action="store_true")
+    ap.add_argument(
+        "--scenarios",
+        default=None,
+        help="comma-separated catalog scenarios to train across "
+        "(nested-vmap distribution training; num-envs must be a multiple)",
+    )
     ap.add_argument("--scenario", default="shopping")
     ap.add_argument("--traffic", default="medium")
     ap.add_argument("--timesteps", type=int, default=300_000)

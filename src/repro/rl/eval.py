@@ -17,14 +17,29 @@ def evaluate(
     key: jax.Array,
     num_episodes: int = 16,
     env_params: EnvParams | None = None,
+    params_axis: int | None = None,
 ) -> dict:
-    """Run ``num_episodes`` full episodes in parallel; return mean metrics."""
+    """Run ``num_episodes`` full episodes in parallel; return mean metrics.
+
+    ``params_axis`` mirrors ``make_train``: ``None`` (default) broadcasts one
+    parameter pytree to every episode; ``0`` maps a stacked ``(S, ...)``
+    pytree (scenario catalog, fleet slices) per-episode, requiring
+    ``num_episodes`` to equal the stack size S.
+    """
     env_params = env_params if env_params is not None else env.default_params
+    if params_axis is not None:
+        n_stacked = jax.tree_util.tree_leaves(env_params)[0].shape[params_axis]
+        if num_episodes != n_stacked:
+            raise ValueError(
+                f"params_axis={params_axis} maps params per-episode, so "
+                f"num_episodes={num_episodes} must equal the stacked "
+                f"parameter count {n_stacked}"
+            )
 
     @jax.jit
     def run(key):
         keys = jax.random.split(key, num_episodes)
-        obs, state = jax.vmap(env.reset, in_axes=(0, None))(keys, env_params)
+        obs, state = jax.vmap(env.reset, in_axes=(0, params_axis))(keys, env_params)
 
         def step_fn(carry, _):
             obs, state, key, ep_reward = carry
@@ -32,7 +47,7 @@ def evaluate(
             action = policy(policy_params, k_act, obs)
             step_keys = jax.random.split(k_step, num_episodes)
             obs, state, reward, done, info = jax.vmap(
-                env.step, in_axes=(0, 0, 0, None)
+                env.step, in_axes=(0, 0, 0, params_axis)
             )(step_keys, state, action, env_params)
             return (obs, state, key, ep_reward + reward), None
 

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.core.env import ChargaxEnv
 from repro.core.state import EnvParams
+from repro.distributed import env_sharding
 from repro.optim import AdamWConfig, adamw_init, adamw_update, apply_updates, linear_anneal
 from repro.rl import networks
 
@@ -89,11 +90,16 @@ def make_train(
     ``scenario_params`` — a stacked ``(S, ...)`` parameter pytree (e.g. from
     ``scenarios.stack_params``) — trains one agent across a scenario
     *distribution* for robustness (the paper's distribution-shift setting):
-    the ``num_envs`` parallel environments are assigned scenarios round-robin,
-    so every rollout mixes all S worlds and the minibatches interleave them.
+    the ``num_envs`` parallel environments are split into S contiguous blocks
+    of ``num_envs // S`` and stepped under a *nested* vmap (scenario axis
+    outer, envs-per-scenario inner), so every rollout mixes all S worlds and
+    the minibatches interleave them while device memory holds exactly ONE
+    copy of each scenario's exogenous tables (leading axis S, never
+    ``num_envs``).  The returned ``train`` function carries the resolved
+    parameter pytree as ``train.lowered_env_params`` for introspection.
     """
     n_heads, n_actions = env.num_action_heads, env.num_actions_per_head
-    constrain = shard_envs or (lambda x: x)
+    constrain = shard_envs or env_sharding.constrain_env_batch
 
     if scenario_params is not None:
         if env_params is not None:
@@ -102,18 +108,14 @@ def make_train(
         if config.num_envs % n_scen != 0:
             raise ValueError(
                 f"num_envs={config.num_envs} is not a multiple of {n_scen} "
-                "scenarios: round-robin assignment would drop scenarios or "
-                "skew the training mixture; adjust num_envs"
+                "scenarios: the nested vmap assigns num_envs // S envs per "
+                "scenario, so an uneven split would drop scenarios or skew "
+                "the training mixture; adjust num_envs"
             )
-        idx = jnp.arange(config.num_envs) % n_scen
-        # per-env parameter slices: leading axis num_envs, vmapped like state
-        env_params = jax.tree_util.tree_map(
-            lambda x: jnp.asarray(x)[idx], scenario_params
-        )
-        params_axis = 0
+        env_params = jax.tree_util.tree_map(jnp.asarray, scenario_params)
     else:
         env_params = env_params if env_params is not None else env.default_params
-        params_axis = None
+        n_scen = None
 
     lr = (
         linear_anneal(config.lr, config.num_updates * config.update_epochs * config.num_minibatches)
@@ -122,8 +124,42 @@ def make_train(
     )
     opt_cfg = AdamWConfig(max_grad_norm=config.max_grad_norm)
 
-    v_reset = jax.vmap(env.reset, in_axes=(0, params_axis))
-    v_step = jax.vmap(env.step, in_axes=(0, 0, 0, params_axis))
+    if n_scen is not None:
+        # nested vmap: outer axis S over the stacked scenario tables, inner
+        # axis E = num_envs // S over envs sharing one table copy.  The
+        # (S, E, ...) batch is flattened back to (num_envs, ...) so the rest
+        # of the training loop is layout-agnostic.
+        n_env_per = config.num_envs // n_scen
+
+        def nest(x):
+            return x.reshape((n_scen, n_env_per) + x.shape[1:])
+
+        def flat(x):
+            return x.reshape((config.num_envs,) + x.shape[2:])
+
+        nested_reset = jax.vmap(jax.vmap(env.reset, in_axes=(0, None)), in_axes=(0, 0))
+        nested_step = jax.vmap(
+            jax.vmap(env.step, in_axes=(0, 0, 0, None)), in_axes=(0, 0, 0, 0)
+        )
+
+        def v_reset(keys, params):
+            obs, state = nested_reset(nest(keys), params)
+            return flat(obs), jax.tree_util.tree_map(flat, state)
+
+        def v_step(keys, state, action, params):
+            obs, state, reward, done, info = nested_step(
+                nest(keys), jax.tree_util.tree_map(nest, state), nest(action), params
+            )
+            return (
+                flat(obs),
+                jax.tree_util.tree_map(flat, state),
+                flat(reward),
+                flat(done),
+                jax.tree_util.tree_map(flat, info),
+            )
+    else:
+        v_reset = jax.vmap(env.reset, in_axes=(0, None))
+        v_step = jax.vmap(env.step, in_axes=(0, 0, 0, None))
 
     def policy(params, obs):
         return networks.apply_actor_critic(params, obs, n_heads, n_actions)
@@ -256,6 +292,13 @@ def make_train(
         runner, metrics = jax.lax.scan(update_step, runner, None, config.num_updates)
         return {"runner_state": runner, "metrics": metrics}
 
+    # introspection: the parameter pytree exactly as it will be closed over
+    # and lowered — tests assert scenario tables keep leading axis S (one
+    # copy per scenario), not num_envs (a copy per environment).
+    train.lowered_env_params = env_params
+    train.scenario_shape = (
+        (n_scen, config.num_envs // n_scen) if n_scen is not None else None
+    )
     return train
 
 

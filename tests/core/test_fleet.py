@@ -122,7 +122,9 @@ def test_fleet_lane_equals_single_station_env():
             _assert_lanes_equal(lane, s, env.n_evse, ctx=f"station {i} step {t}")
             assert np.array_equal(np.asarray(fobs)[i], np.asarray(obs)), (i, t)
             assert np.array_equal(float(freward[i]), float(r)), (i, t)
-        assert float(finfo["fleet_reward"]) == pytest.approx(
+        # fleet aggregates are broadcast to (S,): uniform info leaf shapes
+        assert finfo["fleet_reward"].shape == (fleet.n_stations,)
+        assert float(finfo["fleet_reward"][0]) == pytest.approx(
             float(jnp.sum(freward)), rel=1e-6
         )
 
@@ -182,6 +184,53 @@ def test_fleet_requires_consistent_inputs():
         FleetEnv([])
     with pytest.raises(ValueError, match="one scenario entry per station"):
         FleetEnv(FLEET_ARCHS, scenarios=["shopping_flat"])
+
+
+def test_fleet_info_uniform_and_steppable_under_outer_vmap():
+    """Every info leaf is (S,), so tree_map stacking works when the fleet is
+    nested under an outer vmap (regression: scalar fleet_reward/fleet_profit
+    used to break auto-reset/stacking of the info pytree)."""
+    fleet = FleetEnv(["paper_16", "deep_4x4"])
+    params = fleet.default_params
+    _, _, reward, _, info = fleet.step(
+        jax.random.key(1),
+        fleet.reset(jax.random.key(0), params)[1],
+        fleet.sample_action(jax.random.key(2)),
+        params,
+    )
+    shapes = {k: v.shape for k, v in info.items()}
+    assert set(shapes.values()) == {(fleet.n_stations,)}, shapes
+    np.testing.assert_allclose(
+        np.asarray(info["fleet_reward"]),
+        np.full(fleet.n_stations, float(jnp.sum(reward))),
+        rtol=1e-6,
+    )
+
+    # outer vmap over a batch of fleet replicas: one program, (B, S) outputs
+    B = 3
+    keys = jax.random.split(jax.random.key(3), B)
+    obs_b, state_b = jax.vmap(fleet.reset, in_axes=(0, None))(keys, params)
+    act_b = jnp.stack(
+        [fleet.sample_action(k) for k in jax.random.split(jax.random.key(4), B)]
+    )
+    step_b = jax.jit(jax.vmap(fleet.step, in_axes=(0, 0, 0, None)))
+    obs_b, state_b, reward_b, done_b, info_b = step_b(keys, state_b, act_b, params)
+    assert reward_b.shape == (B, fleet.n_stations)
+    for k, v in info_b.items():
+        assert v.shape == (B, fleet.n_stations), k
+    # stacked aggregates match per-replica sums
+    np.testing.assert_allclose(
+        np.asarray(info_b["fleet_reward"])[:, 0],
+        np.asarray(reward_b).sum(axis=1),
+        rtol=1e-6,
+    )
+    # tree_map-based auto-reset composes: where() over uniform (B, S) leaves
+    masked = jax.tree_util.tree_map(
+        lambda x: jnp.where(done_b, jnp.zeros_like(x), x), info_b
+    )
+    assert jax.tree_util.tree_structure(masked) == jax.tree_util.tree_structure(
+        info_b
+    )
 
 
 def test_fleet_mixed_none_and_named_scenarios():

@@ -97,3 +97,39 @@ def test_evaluate_runs():
     res = evaluate(env, BASELINES["max_charge"](env), None, jax.random.key(0), 4)
     assert res["cars_served"] > 0
     assert np.isfinite(res["episode_reward"])
+
+
+def test_evaluate_params_axis_maps_stacked_params():
+    """Regression: evaluate used to hard-code in_axes=(0, 0, 0, None), so a
+    stacked (S, ...) scenario/fleet parameter pytree could not be evaluated
+    per-episode.  params_axis=0 maps one stacked slice per episode."""
+    from repro import scenarios
+
+    env = ChargaxEnv(EnvConfig())
+    names = ["shopping_flat", "highway_demand_charge"]
+    stacked = scenarios.stack_params(
+        [scenarios.make(n).make_params(env) for n in names]
+    )
+    pol = BASELINES["max_charge"](env)
+    res = evaluate(
+        env, pol, None, jax.random.key(0),
+        num_episodes=len(names), env_params=stacked, params_axis=0,
+    )
+    assert res["cars_served"] > 0
+    assert np.isfinite(res["episode_reward"])
+
+    # the two worlds genuinely differ: per-episode metrics must not collapse
+    # to the broadcast single-params result for both scenarios
+    res_flat = evaluate(
+        env, pol, None, jax.random.key(0),
+        num_episodes=len(names),
+        env_params=scenarios.make("shopping_flat").make_params(env),
+    )
+    assert res["daily_profit"] != pytest.approx(res_flat["daily_profit"])
+
+    # stacked size must match num_episodes, loudly
+    with pytest.raises(ValueError, match="must equal the stacked"):
+        evaluate(
+            env, pol, None, jax.random.key(0),
+            num_episodes=4, env_params=stacked, params_axis=0,
+        )
