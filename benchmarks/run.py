@@ -32,6 +32,10 @@ MODULES = {
         "benchmarks.fleet_sharded",
         "Fleet: station axis sharded over the device mesh",
     ),
+    "v2g": (
+        "benchmarks.v2g",
+        "V2G: allow_v2g throughput + mixed-scenario PPO profit vs baselines",
+    ),
     "roofline": ("benchmarks.roofline_report", "dry-run + roofline tables"),
 }
 

@@ -148,6 +148,8 @@ class ChargaxEnv:
             evse_path_eff=jnp.asarray(lay.evse_path_eff),
             evse_is_dc=jnp.asarray(lay.evse_is_dc),
             evse_mask=jnp.asarray(lay.mask),
+            evse_v2g_mask=jnp.asarray(lay.mask),  # default: every real lane
+            #   is bidirectional hardware; scenarios lower a fraction instead
             batt_voltage=jnp.float32(b.voltage),
             batt_max_current=jnp.float32(b.max_current * benabled),
             batt_capacity=jnp.float32(b.capacity_kwh),
@@ -173,8 +175,9 @@ class ChargaxEnv:
             soc0_b=jnp.float32(user["soc0"][1]),
             p_time_sensitive=jnp.float32(user["p_time_sensitive"]),
             p_sell=jnp.float32(0.75),  # Table 3
+            p_v2g_comp=jnp.float32(0.75),  # = p_sell: V2G spread off by default
             grid_sell_discount=jnp.float32(0.9),
-            facility_cost=jnp.float32(0.25),  # EUR per 5-min step
+            facility_cost=jnp.float32(3.0),  # EUR per hour (0.25 / 5-min step)
             demand_charge_rate=jnp.float32(0.0),  # flat tariff by default
             demand_contract_kw=jnp.float32(0.0),
             moer_scale=jnp.float32(0.4),
@@ -197,7 +200,7 @@ class ChargaxEnv:
     @property
     def obs_dim(self) -> int:
         n = self.n_evse
-        return 7 * n + 2 + 4 + 3  # ports, battery, time feats, price feats
+        return 8 * n + 2 + 4 + 3  # ports, battery, time feats, price feats
 
     def sample_action(self, key: jax.Array) -> jnp.ndarray:
         return jax.random.randint(
@@ -222,6 +225,7 @@ class ChargaxEnv:
             occupied=zf,
             soc=zf,
             e_remain=zf,
+            v2g_debt=zf,
             batt_current=jnp.float32(0.0),
             batt_soc=params.batt_init_soc,
             t_remain=zi,
@@ -235,6 +239,7 @@ class ChargaxEnv:
             price_buy=params.price_buy_table[day],
             profit_cum=jnp.float32(0.0),
             energy_delivered=jnp.float32(0.0),
+            energy_discharged=jnp.float32(0.0),
             cars_served=jnp.float32(0.0),
             cars_rejected=jnp.float32(0.0),
             missing_kwh_cum=jnp.float32(0.0),
@@ -261,6 +266,7 @@ class ChargaxEnv:
                 cfg.allow_v2g,
                 params.evse_max_current,
                 params.batt_max_current,
+                v2g_mask=params.evse_v2g_mask,
             )
         elif cfg.action_mode == "delta":  # paper's additive form
             d_evse, d_batt = decode_action(
@@ -273,6 +279,10 @@ class ChargaxEnv:
             tgt_evse = state.evse_current + d_evse
             if not cfg.allow_v2g:
                 tgt_evse = jnp.maximum(tgt_evse, 0.0)  # ...but targets may not
+            else:  # charge-only hardware never targets negative amps
+                tgt_evse = jnp.where(
+                    params.evse_v2g_mask > 0.5, tgt_evse, jnp.maximum(tgt_evse, 0.0)
+                )
             tgt_batt = state.batt_current + d_batt
         else:
             raise ValueError(f"unknown action_mode {cfg.action_mode!r}")
@@ -292,7 +302,9 @@ class ChargaxEnv:
             ]
             * dt
         )
-        energies = step_energies(params, charged.e_car, charged.e_batt_net, e_pv)
+        energies = step_energies(
+            params, charged.e_car, charged.e_batt_net, e_pv, charged.e_repaid
+        )
         p_buy = state.price_buy[jnp.mod(state.t, spd)]
         reward, pi, pen = compute_reward(
             params,
@@ -309,9 +321,22 @@ class ChargaxEnv:
             dt,
         )
 
+        # -- calendar rollover: at midnight advance the day (mod table length)
+        # and reload the price row, so multi-day episodes see day-1+ prices,
+        # PV, arrival-day-scale and the weekday feature instead of replaying
+        # day 0 forever
+        t_next = state.t + 1
+        n_days = params.price_buy_table.shape[0]
+        midnight = jnp.mod(t_next, spd) == 0
+        day_next = jnp.where(midnight, jnp.mod(state.day + 1, n_days), state.day)
+        price_next = jnp.where(
+            midnight, params.price_buy_table[day_next], state.price_buy
+        )
         new_state = replace(
             arrived.state,
-            t=state.t + 1,
+            t=t_next,
+            day=day_next,
+            price_buy=price_next,
             profit_cum=state.profit_cum + pi,
         )
         done = new_state.t >= cfg.episode_steps
@@ -343,6 +368,10 @@ class ChargaxEnv:
                 state.evse_current / imax,
                 state.soc,
                 state.e_remain / jnp.maximum(state.cap, 1.0),
+                # V2G debt: how much of the remaining request is energy the
+                # station borrowed (repaid at p_v2g_comp, not billed) — the
+                # agent needs this to price discharge decisions correctly
+                state.v2g_debt / jnp.maximum(state.cap, 1.0),
                 jnp.clip(state.t_remain.astype(jnp.float32) / spd, -1.0, 1.0),
                 state.rhat / imax,
                 state.user_type,

@@ -24,6 +24,10 @@ class StepEnergies(NamedTuple):
     e_batt_net: jnp.ndarray  # battery grid-side energy (signed)
     e_grid_net: jnp.ndarray  # Eq. 1 total (net of on-site PV)
     e_pv: jnp.ndarray  # on-site PV generation this step (>= 0)
+    e_car_in: jnp.ndarray  # kWh delivered INTO cars (>= 0), billed at p_sell
+    e_car_out: jnp.ndarray  # kWh drawn OUT of cars (>= 0), paid at p_v2g_comp
+    e_car_repaid: jnp.ndarray  # kWh of e_car_in repaying V2G debt: settled at
+    #     p_v2g_comp instead of p_sell so cycling a pack nets zero revenue
 
 
 def step_energies(
@@ -31,6 +35,7 @@ def step_energies(
     e_car: jnp.ndarray,
     e_batt: jnp.ndarray,
     e_pv: jnp.ndarray | float = 0.0,
+    e_repaid: jnp.ndarray | float = 0.0,
 ) -> StepEnergies:
     """Aggregate per-port car energies (kWh, signed) into Eq. 1 terms.
 
@@ -42,9 +47,15 @@ def step_energies(
     eff = params.evse_path_eff
     e_grid_in = jnp.sum(jnp.where(e_car > 0, e_car / eff, 0.0))
     e_grid_out = jnp.sum(jnp.where(e_car < 0, e_car * eff, 0.0))
+    e_car_in = jnp.sum(jnp.maximum(e_car, 0.0))
+    e_car_out = jnp.sum(jnp.maximum(-e_car, 0.0))
+    e_car_repaid = jnp.sum(jnp.asarray(e_repaid, jnp.float32))
     e_pv = jnp.asarray(e_pv, jnp.float32)
     e_grid_net = e_grid_in + e_grid_out + e_batt - e_pv
-    return StepEnergies(e_net, e_grid_in, e_grid_out, e_batt, e_grid_net, e_pv)
+    return StepEnergies(
+        e_net, e_grid_in, e_grid_out, e_batt, e_grid_net, e_pv,
+        e_car_in, e_car_out, e_car_repaid,
+    )
 
 
 def profit(
@@ -55,9 +66,18 @@ def profit(
 ) -> jnp.ndarray:
     """Eq. 2.  p_sell,grid is a discounted buy price (net sellback).
 
-    Scenario tariffs add a demand charge: grid draw above the contracted
-    power (``demand_contract_kw``) is billed at ``demand_charge_rate``
-    EUR per kW per step — the per-step decomposition of a monthly peak fee.
+    Customer revenue splits over the V2G spread: energy into cars is billed
+    at ``p_sell``; energy drawn back out (V2G) compensates the owner at
+    ``p_v2g_comp`` (defaults to ``p_sell``, which recovers the paper's
+    single-price Eq. 2 exactly).  Refills that repay earlier discharge
+    (``e_car_repaid``) also settle at ``p_v2g_comp`` — both legs of a
+    borrow/return cycle net to zero, so the station cannot mint revenue by
+    churning a pack; profit from V2G comes only from the grid-side
+    buy-low/sell-high spread.  Scenario tariffs add a demand charge: grid
+    draw above the contracted power (``demand_contract_kw``) is billed at
+    ``demand_charge_rate`` EUR per kW per step — the per-step decomposition
+    of a monthly peak fee.  ``facility_cost`` is EUR per hour, scaled by
+    ``dt_hours`` so the effective cost per simulated hour is dt-invariant.
     """
     p_sell_grid = params.grid_sell_discount * p_buy
     grid_cost = jnp.where(
@@ -69,7 +89,12 @@ def profit(
     demand_cost = params.demand_charge_rate * jnp.maximum(
         demand_kw - params.demand_contract_kw, 0.0
     )
-    return params.p_sell * energies.e_net - grid_cost - demand_cost - params.facility_cost
+    revenue = (
+        params.p_sell * (energies.e_car_in - energies.e_car_repaid)
+        + params.p_v2g_comp * energies.e_car_repaid
+        - params.p_v2g_comp * energies.e_car_out
+    )
+    return revenue - grid_cost - demand_cost - params.facility_cost * dt_hours
 
 
 class PenaltyTerms(NamedTuple):

@@ -43,6 +43,8 @@ class EnvParams:
     evse_path_eff: jnp.ndarray  # (n_evse,)
     evse_is_dc: jnp.ndarray  # (n_evse,)
     evse_mask: jnp.ndarray  # (n_evse,) 1=real lane, 0=fleet padding
+    evse_v2g_mask: jnp.ndarray  # (n_evse,) 1=bidirectional port (discharge OK
+    #     when EnvConfig.allow_v2g); 0=charge-only hardware
     # --- station battery ---
     batt_voltage: jnp.ndarray | float
     batt_max_current: jnp.ndarray | float
@@ -70,8 +72,9 @@ class EnvParams:
     p_time_sensitive: jnp.ndarray | float
     # --- economics ---
     p_sell: jnp.ndarray | float  # EUR/kWh charged to customers (Table 3: 0.75)
+    p_v2g_comp: jnp.ndarray | float  # EUR/kWh paid to owners for V2G discharge
     grid_sell_discount: jnp.ndarray | float  # p_sell,grid = discount * p_buy
-    facility_cost: jnp.ndarray | float  # c_dt, EUR per step
+    facility_cost: jnp.ndarray | float  # c_dt, EUR per HOUR (scaled by dt)
     demand_charge_rate: jnp.ndarray | float  # EUR per kW·step above the contract
     demand_contract_kw: jnp.ndarray | float  # contracted grid power [kW]
     moer_scale: jnp.ndarray | float  # kgCO2/kWh scale of the synthetic MOER curve
@@ -89,6 +92,9 @@ class EnvState:
     occupied: jnp.ndarray  # (N,) {0,1}
     soc: jnp.ndarray  # (N,) state of charge of plugged car
     e_remain: jnp.ndarray  # (N,) kWh still requested
+    v2g_debt: jnp.ndarray  # (N,) kWh the station discharged from this pack
+    #     and still owes back; refills up to the debt settle at p_v2g_comp
+    #     instead of p_sell, so discharge+recharge churn nets zero revenue
     # ---- endogenous: station battery ----
     batt_current: jnp.ndarray  # () signed amps
     batt_soc: jnp.ndarray  # ()
@@ -106,6 +112,7 @@ class EnvState:
     # ---- bookkeeping (for info/eval; not observed) ----
     profit_cum: jnp.ndarray  # ()
     energy_delivered: jnp.ndarray  # () kWh into cars
+    energy_discharged: jnp.ndarray  # () kWh drawn OUT of cars (V2G)
     cars_served: jnp.ndarray  # ()
     cars_rejected: jnp.ndarray  # ()
     missing_kwh_cum: jnp.ndarray  # () unmet charge at forced departures

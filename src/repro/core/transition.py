@@ -54,18 +54,26 @@ def decode_action(
     allow_v2g: bool,
     evse_max_current: jnp.ndarray,
     batt_max_current: jnp.ndarray,
+    v2g_mask: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Map a discrete factorized action (N+1,) int32 in [0, 2D] to target amps.
 
     Level k maps to ((k - D)/D) * I_max: the paper's "10%, 20%, ... up to 100%"
     discretisation, extended symmetrically for discharging.  Ports without V2G
-    clip negative targets to 0 (the battery head always may discharge).
+    clip negative targets to 0 (the battery head always may discharge).  When
+    V2G is on, ``v2g_mask`` (``EnvParams.evse_v2g_mask``) marks which ports
+    have bidirectional hardware — the rest stay charge-only, so a scenario can
+    lower any port fraction without a new compilation.
     """
     d = float(discretization)
     frac = (action.astype(jnp.float32) - d) / d  # [-1, 1]
     port_frac, batt_frac = frac[:-1], frac[-1]
     if not allow_v2g:
         port_frac = jnp.maximum(port_frac, 0.0)
+    elif v2g_mask is not None:
+        port_frac = jnp.where(
+            v2g_mask > 0.5, port_frac, jnp.maximum(port_frac, 0.0)
+        )
     return port_frac * evse_max_current, batt_frac * batt_max_current
 
 
@@ -153,6 +161,8 @@ class ChargeResult(NamedTuple):
     state: EnvState
     e_car: jnp.ndarray  # (N,) kWh delivered into each car this step (signed)
     e_batt_net: jnp.ndarray  # () kWh grid-side battery energy (signed)
+    e_repaid: jnp.ndarray  # (N,) kWh of this step's charge that repays
+    #     earlier V2G discharge (settled at p_v2g_comp, not billed at p_sell)
 
 
 def charge_cars(
@@ -160,9 +170,23 @@ def charge_cars(
 ) -> ChargeResult:
     e_car = params.evse_voltage * applied.evse_current * dt_hours / 1000.0  # kWh
     soc = jnp.clip(state.soc + e_car / jnp.maximum(state.cap, 1e-6), 0.0, 1.0)
-    e_remain = jnp.maximum(state.e_remain - e_car, 0.0)
+    # remaining request grows when a car is discharged (V2G) but never past
+    # the pack headroom (1 - SoC) * cap — an uncapped request would be
+    # unfillable energy poisoning the missing_kwh satisfaction penalty
+    e_remain = jnp.minimum(
+        jnp.maximum(state.e_remain - e_car, 0.0), (1.0 - soc) * state.cap
+    )
     rhat = charge_rate(soc, state.rbar, state.tau) * state.occupied
-    t_remain = state.t_remain - 1
+    # deadlines tick only on occupied ports; padded/idle lanes hold at 0
+    # instead of drifting negative without bound
+    t_remain = jnp.where(state.occupied > 0.5, state.t_remain - 1, state.t_remain)
+
+    # V2G settlement bookkeeping: discharged energy becomes debt the station
+    # owes the pack; subsequent charge repays debt first (settled at
+    # p_v2g_comp in the reward, not billed at p_sell) so a discharge/recharge
+    # cycle earns nothing beyond a genuine buy/sell price spread
+    e_repaid = jnp.minimum(jnp.maximum(e_car, 0.0), state.v2g_debt)
+    v2g_debt = state.v2g_debt - e_repaid + jnp.maximum(-e_car, 0.0)
 
     # battery: store eta*E when charging, deliver E*eta grid-side when discharging
     e_b = params.batt_voltage * applied.batt_current * dt_hours / 1000.0
@@ -179,13 +203,16 @@ def charge_cars(
         evse_current=applied.evse_current,
         soc=soc,
         e_remain=e_remain,
+        v2g_debt=v2g_debt,
         rhat=rhat,
         t_remain=t_remain,
         batt_current=applied.batt_current,
         batt_soc=batt_soc,
         energy_delivered=state.energy_delivered + jnp.sum(jnp.maximum(e_car, 0.0)),
+        energy_discharged=state.energy_discharged
+        + jnp.sum(jnp.maximum(-e_car, 0.0)),
     )
-    return ChargeResult(new_state, e_car, e_b)
+    return ChargeResult(new_state, e_car, e_b, e_repaid)
 
 
 # ---------------------------------------------------------------------------
@@ -220,6 +247,7 @@ def depart_cars(state: EnvState) -> DepartResult:
         occupied=state.occupied * keep,
         soc=state.soc * keep,
         e_remain=state.e_remain * keep,
+        v2g_debt=state.v2g_debt * keep,
         t_remain=state.t_remain * keep.astype(state.t_remain.dtype),
         rhat=state.rhat * keep,
         cap=state.cap * keep,
@@ -312,6 +340,7 @@ def arrive_cars(params: EnvParams, state: EnvState, key: jax.Array) -> ArriveRes
         occupied=state.occupied * (1 - a) + a,
         soc=state.soc * (1 - a) + a * soc0,
         e_remain=state.e_remain * (1 - a) + a * e_req,
+        v2g_debt=state.v2g_debt * (1 - a),  # fresh arrivals carry no debt
         t_remain=jnp.where(assign, stay_steps, state.t_remain),
         rhat=state.rhat * (1 - a) + a * charge_rate(soc0, rbar, tau),
         cap=state.cap * (1 - a) + a * cap,

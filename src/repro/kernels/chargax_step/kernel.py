@@ -89,7 +89,8 @@ def _chargax_kernel(
     e = v * i * dt_hours / 1000.0
     soc_delta = jnp.where(e >= 0, e * eff_in, e * eff_out)
     soc_new = jnp.clip(soc + soc_delta / jnp.maximum(cap, 1e-6), 0.0, 1.0)
-    e_rem_new = jnp.minimum(jnp.maximum(e_remain - e, 0.0), BIG)
+    headroom = jnp.where(e_remain >= 0.5 * BIG, BIG, (1.0 - soc_new) * cap)
+    e_rem_new = jnp.minimum(jnp.maximum(e_remain - e, 0.0), headroom)
     rhat_new = jnp.where(soc_new <= tau, rbar, rbar * (1.0 - soc_new) * inv_tau) * occ
 
     current_out[...] = i

@@ -91,6 +91,11 @@ def fused_step_ref(slabs: PoleSlabs, pp: PoleParams, dt_hours: float) -> FusedOu
     e = v * i * dt_hours / 1000.0  # kWh, pole-side
     soc_delta = jnp.where(e >= 0, e * pp.eff_in, e * pp.eff_out)
     soc = jnp.clip(slabs.soc + soc_delta / jnp.maximum(slabs.cap, 1e-6), 0.0, 1.0)
-    e_remain = jnp.minimum(jnp.maximum(slabs.e_remain - e, 0.0), BIG)
+    # car lanes: requests grown by discharge clamp at pack headroom (matches
+    # core charge_cars); the battery pole (e_remain sentinel BIG) stays BIG
+    headroom = jnp.where(
+        slabs.e_remain >= 0.5 * BIG, BIG, (1.0 - soc) * slabs.cap
+    )
+    e_remain = jnp.minimum(jnp.maximum(slabs.e_remain - e, 0.0), headroom)
     rhat = charge_rate(soc, slabs.rbar, slabs.tau) * slabs.occupied
     return FusedOut(i, soc, e_remain, rhat, e, excess)

@@ -80,21 +80,39 @@ def run_dryrun(args) -> dict:
 
 
 def run_train(args):
-    env = ChargaxEnv(EnvConfig(scenario=args.scenario, traffic=args.traffic))
+    env = ChargaxEnv(
+        EnvConfig(scenario=args.scenario, traffic=args.traffic, allow_v2g=args.v2g)
+    )
     cfg = PPOConfig(
         total_timesteps=args.timesteps,
         num_envs=args.num_envs,
         rollout_steps=args.rollout,
     )
+    scenario_names = args.scenarios.split(",") if args.scenarios else None
+    if args.v2g and scenario_names is None:
+        # default --v2g distribution: V2G-heavy worlds mixed with their
+        # charge-only counterparts (per-port v2g masks are plain arrays, so
+        # the mix still compiles once)
+        from repro.scenarios import V2G_MIXED_PACK
+
+        # largest pack prefix that divides num_envs (nested vmap needs an
+        # even envs-per-scenario split)
+        n_scen = max(
+            s for s in range(1, len(V2G_MIXED_PACK) + 1) if args.num_envs % s == 0
+        )
+        scenario_names = list(V2G_MIXED_PACK[:n_scen])
+        print(f"[ppo] --v2g default mix: {','.join(scenario_names)}")
     scenario_params = None
-    if args.scenarios:
+    if scenario_names:
         from repro import scenarios as _scen
 
-        names = args.scenarios.split(",")
         scenario_params = _scen.stack_params(
-            [_scen.make(n).make_params(env) for n in names]
+            [_scen.make(n).make_params(env) for n in scenario_names]
         )
-        print(f"[ppo] training across {len(names)} scenarios (one table copy each)")
+        print(
+            f"[ppo] training across {len(scenario_names)} scenarios "
+            "(one table copy each)"
+        )
 
     # multi-device: shard the env batch over a data mesh built from every
     # visible device; single device degrades to no mesh / no constraints
@@ -130,6 +148,30 @@ def run_train(args):
         f"({args.timesteps/wall:,.0f} env-steps/s) | "
         f"reward first->last: {float(rr[0]):.1f} -> {float(rr[-1]):.1f}"
     )
+    if args.v2g and scenario_names:
+        # discharge/degradation report: trained agent vs the always-max and
+        # arbitrage baselines on the first (V2G-heavy) scenario of the mix
+        from repro import scenarios as _scen
+        from repro.rl import evaluate, make_ppo_policy
+        from repro.rl.baselines import max_charge_policy, v2g_arbitrage_policy
+
+        sc_params = _scen.make(scenario_names[0]).make_params(env)
+        policies = {
+            "ppo": (make_ppo_policy(env), out["runner_state"].params),
+            "max_charge": (max_charge_policy(env), None),
+            "v2g_arbitrage": (v2g_arbitrage_policy(env, sc_params), None),
+        }
+        for name, (pol, pol_params) in policies.items():
+            res = evaluate(
+                env, pol, pol_params, jax.random.key(17), 16, env_params=sc_params
+            )
+            print(
+                f"[v2g eval] {scenario_names[0]} {name}: "
+                f"profit={res['daily_profit']:.1f} "
+                f"discharged={res['energy_discharged_kwh']:.1f}kWh "
+                f"discharge_frac={res['v2g_discharge_frac']:.3f} "
+                f"missing={res['missing_kwh']:.1f}kWh"
+            )
     return out
 
 
@@ -144,6 +186,12 @@ def main(argv=None):
     )
     ap.add_argument("--scenario", default="shopping")
     ap.add_argument("--traffic", default="medium")
+    ap.add_argument(
+        "--v2g",
+        action="store_true",
+        help="allow car discharging (EnvConfig.allow_v2g); without --scenarios "
+        "this trains across the bundled mixed v2g/non-v2g pack",
+    )
     ap.add_argument("--timesteps", type=int, default=300_000)
     ap.add_argument("--num-envs", type=int, default=12)
     ap.add_argument("--rollout", type=int, default=300)

@@ -1,6 +1,12 @@
 """RL substrate: PureJaxRL-style PPO, baselines, evaluation (paper §5)."""
 from repro.rl.ppo import PPOConfig, make_train, make_ppo_policy
-from repro.rl.baselines import BASELINES, max_charge_policy, random_policy
+from repro.rl.baselines import (
+    BASELINES,
+    max_charge_policy,
+    price_threshold_policy,
+    random_policy,
+    v2g_arbitrage_policy,
+)
 from repro.rl.eval import evaluate
 from repro.rl import networks
 
@@ -10,7 +16,9 @@ __all__ = [
     "make_ppo_policy",
     "BASELINES",
     "max_charge_policy",
+    "price_threshold_policy",
     "random_policy",
+    "v2g_arbitrage_policy",
     "evaluate",
     "networks",
 ]

@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.env import ChargaxEnv
+from repro.core.state import EnvParams
 
 
 def max_charge_policy(env: ChargaxEnv):
@@ -48,8 +49,51 @@ def price_threshold_policy(env: ChargaxEnv, low_frac: float = 0.4):
     return policy
 
 
+def v2g_arbitrage_policy(
+    env: ChargaxEnv,
+    env_params: EnvParams | None = None,
+    hi_quantile: float = 0.75,
+    lo_quantile: float = 0.40,
+    met_frac: float = 0.02,
+):
+    """V2G price arbitrage: discharge *idle-full* packs above a price quantile.
+
+    Thresholds are quantiles of the scenario's own price table (so the same
+    rule transfers across ToU/flat/crisis tariffs).  Above ``hi_quantile``
+    the battery and every port whose *original* request is already served
+    (``e_remain`` is all V2G debt: the pack earns nothing idle, so cycling
+    it has zero opportunity cost) sell at ``grid_sell_discount * p_buy``
+    while compensating owners ``p_v2g_comp``; debt is repaid once prices
+    drop, never at the peak.  Ports with unmet customer demand always
+    charge at max: the retail margin ``p_sell - p_buy`` dominates any grid
+    spread.  The battery refills in the cheap band below ``lo_quantile``.
+    Needs ``EnvConfig(allow_v2g=True)`` for the port discharge to act.
+    """
+    params = env_params if env_params is not None else env.default_params
+    table = jnp.asarray(params.price_buy_table)
+    q_hi = jnp.quantile(table, hi_quantile)
+    q_lo = jnp.quantile(table, lo_quantile)
+    d = env.config.discretization
+    n = env.n_evse
+
+    def policy(params, key, obs):
+        port = obs[..., : 8 * n].reshape(obs.shape[:-1] + (n, 8))
+        # original request served when the remaining energy is all V2G debt
+        met = port[..., 3] - port[..., 4] < met_frac
+        p_now = obs[..., -3]  # current buy price (observation price feats)
+        expensive = p_now >= q_hi
+        cheap = p_now <= q_lo
+        port_level = jnp.where(expensive[..., None] & met, 0, 2 * d)
+        batt_level = jnp.where(expensive, 0, jnp.where(cheap, 2 * d, d))
+        batt = batt_level[..., None]
+        return jnp.concatenate([port_level, batt], axis=-1).astype(jnp.int32)
+
+    return policy
+
+
 BASELINES = {
     "max_charge": max_charge_policy,
     "random": random_policy,
     "price_threshold": price_threshold_policy,
+    "v2g_arbitrage": v2g_arbitrage_policy,
 }

@@ -55,11 +55,18 @@ def evaluate(
             step_fn, (obs, state, key, jnp.zeros(num_episodes)), None,
             env.config.episode_steps,
         )
+        delivered = state.energy_delivered.mean()
+        discharged = state.energy_discharged.mean()
         return {
             "episode_reward": ep_reward.mean(),
             "episode_reward_std": ep_reward.std(),
             "daily_profit": state.profit_cum.mean(),
-            "energy_delivered_kwh": state.energy_delivered.mean(),
+            "energy_delivered_kwh": delivered,
+            # --- V2G / degradation metrics ---
+            "energy_discharged_kwh": discharged,
+            # discharge throughput relative to total port throughput: the
+            # cycling-wear exposure of the plugged fleet (0 when V2G is off)
+            "v2g_discharge_frac": discharged / jnp.maximum(delivered + discharged, 1e-9),
             "cars_served": state.cars_served.mean(),
             "cars_rejected": state.cars_rejected.mean(),
             "missing_kwh": state.missing_kwh_cum.mean(),

@@ -10,7 +10,14 @@ Every scenario lowers to identically-shaped ``EnvParams`` arrays, so one
 jitted ``env.step`` serves the whole catalog (and any user scenario).
 """
 from repro.core.fleet import stack_params
-from repro.scenarios.registry import CATALOG, make, names, register
+from repro.scenarios.registry import (
+    CATALOG,
+    V2G_MIXED_PACK,
+    V2G_PACK,
+    make,
+    names,
+    register,
+)
 from repro.scenarios.scenario import MAX_CAR_MODELS, Scenario
 from repro.scenarios import processes
 
@@ -18,6 +25,8 @@ __all__ = [
     "CATALOG",
     "MAX_CAR_MODELS",
     "Scenario",
+    "V2G_MIXED_PACK",
+    "V2G_PACK",
     "make",
     "names",
     "processes",

@@ -106,5 +106,78 @@ CATALOG = tuple(
             season="summer_peak",
             weekend_factor=1.25,
         ),
+        # ----- V2G-heavy pack (EnvConfig(allow_v2g=True) makes these act) -----
+        Scenario(
+            name="v2g_shopping_tou",
+            description="Shopping ToU arbitrage: cheap owner compensation, "
+            "near-par grid sellback, every port bidirectional",
+            tariff="tou",
+            v2g_comp_price=0.12,
+            grid_sell_discount=0.95,
+        ),
+        Scenario(
+            name="v2g_residential_crisis",
+            description="Residential V2G through DE 2022 crisis ToU peaks — "
+            "the deepest discharge spreads in the catalog",
+            profile="residential",
+            price_region="DE",
+            price_year=2022,
+            tariff="tou",
+            tou_peak_mult=1.8,
+            season="winter_peak",
+            v2g_comp_price=0.15,
+            grid_sell_discount=0.95,
+        ),
+        Scenario(
+            name="v2g_work_solar_split",
+            description="Workplace carport PV with half the ports "
+            "bidirectional: solar-charged packs sold into the evening peak",
+            profile="work",
+            pv_peak_kw=200.0,
+            tariff="tou",
+            tou_offpeak_mult=0.6,
+            weekend_factor=0.35,
+            v2g_comp_price=0.10,
+            v2g_port_fraction=0.5,
+        ),
+        Scenario(
+            name="v2g_degradation_guard",
+            description="Shopping ToU arbitrage with cycling wear priced in "
+            "(degradation weight trims uneconomic discharge)",
+            tariff="tou",
+            v2g_comp_price=0.12,
+            grid_sell_discount=0.95,
+            degradation_weight=0.05,
+        ),
+        Scenario(
+            name="v2g_highway_peak_shaver",
+            description="Highway plaza shaving its demand charge with a "
+            "quarter of the lanes discharging at the peak",
+            profile="highway",
+            traffic="high",
+            demand_charge_rate=0.4,
+            demand_contract_kw=400.0,
+            v2g_comp_price=0.20,
+            v2g_port_fraction=0.25,
+        ),
     ]
+)
+
+# V2G-heavy scenarios plus their charge-only counterparts: the default mixed
+# distribution for `rl_train --v2g` (nested-vmap scenario training, one table
+# copy per scenario, zero recompilation across the mix)
+V2G_PACK = (
+    "v2g_shopping_tou",
+    "v2g_residential_crisis",
+    "v2g_work_solar_split",
+    "v2g_degradation_guard",
+    "v2g_highway_peak_shaver",
+)
+V2G_MIXED_PACK = (
+    "v2g_shopping_tou",
+    "v2g_residential_crisis",
+    "v2g_work_solar_split",
+    "shopping_pv_tou",
+    "residential_winter_crisis",
+    "shopping_flat",
 )

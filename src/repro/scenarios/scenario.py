@@ -63,6 +63,16 @@ class Scenario:
     # --- fleet-mix drift over the year ---
     fleet_drift: str = "none"  # none | big_battery_growth
     fleet_drift_strength: float = 1.0
+    # --- V2G axis (needs EnvConfig.allow_v2g=True to act) ---
+    # sell-price spread: owners are compensated v2g_comp_price EUR/kWh for
+    # discharged energy (None = p_sell: no spread, V2G never pays off) while
+    # the station sells to the grid at grid_sell_discount * p_buy
+    v2g_comp_price: float | None = None
+    grid_sell_discount: float = 0.9
+    # fraction of real ports with bidirectional hardware (first k lanes)
+    v2g_port_fraction: float = 1.0
+    # battery/car wear weight lowered into RewardWeights.degradation
+    degradation_weight: float = 0.0
 
     # ------------------------------------------------------------------
     # Serialisation (registry round-trips, config files)
@@ -98,6 +108,16 @@ class Scenario:
             price_region=self.price_region,
             car_region=self.car_region,
         )
+        # the scenario's declared wear price merges into whatever weights are
+        # in effect; an explicit nonzero caller degradation (an alpha sweep
+        # over that axis) wins over the scenario's default
+        if self.degradation_weight and float(base.weights.degradation) == 0.0:
+            base = replace(
+                base,
+                weights=dataclasses.replace(
+                    base.weights, degradation=float(self.degradation_weight)
+                ),
+            )
 
         # tariff overlay on the day-ahead curve
         prices = np.asarray(base.price_buy_table)
@@ -134,6 +154,23 @@ class Scenario:
             raise ValueError(f"unknown fleet_drift {self.fleet_drift!r}")
         probs_table = processes.fleet_drift_table(probs, probs_end)
 
+        # V2G port fraction: the first k real (unmasked) lanes get
+        # bidirectional hardware — a pure (n_evse,) array swap, so mixed
+        # v2g/non-v2g catalogs share one compiled step
+        if not 0.0 <= self.v2g_port_fraction <= 1.0:
+            raise ValueError(
+                f"v2g_port_fraction must be in [0, 1], got {self.v2g_port_fraction}"
+            )
+        lane_mask = np.asarray(base.evse_mask)
+        n_real = int(lane_mask.sum())
+        n_v2g = int(round(self.v2g_port_fraction * n_real))
+        v2g_mask = np.zeros_like(lane_mask)
+        real_idx = np.flatnonzero(lane_mask > 0.5)
+        v2g_mask[real_idx[:n_v2g]] = 1.0
+
+        comp = self.v2g_comp_price
+        p_v2g_comp = base.p_sell if comp is None else jnp.float32(comp)
+
         return replace(
             base,
             price_buy_table=jnp.asarray(prices),
@@ -146,6 +183,9 @@ class Scenario:
             car_tau=jnp.asarray(tau),
             demand_charge_rate=jnp.float32(self.demand_charge_rate),
             demand_contract_kw=jnp.float32(self.demand_contract_kw),
+            evse_v2g_mask=jnp.asarray(v2g_mask),
+            p_v2g_comp=p_v2g_comp,
+            grid_sell_discount=jnp.float32(self.grid_sell_discount),
         )
 
 

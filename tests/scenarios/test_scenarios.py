@@ -211,3 +211,57 @@ def test_ppo_trains_across_scenario_distribution():
         make_train(
             PPOConfig(num_envs=2, rollout_steps=16), ENV, scenario_params=stacked
         )
+
+
+# ---------------------------------------------------------------------------
+# V2G scenario pack
+# ---------------------------------------------------------------------------
+def test_catalog_spans_twelve_scenarios_including_v2g_pack():
+    assert len(scenarios.names()) >= 12
+    assert len(scenarios.V2G_PACK) >= 4
+    for name in scenarios.V2G_PACK:
+        assert name in scenarios.names()
+    for name in scenarios.V2G_MIXED_PACK:
+        assert name in scenarios.names()
+
+
+def test_v2g_axis_lowers_to_params():
+    sc = scenarios.make("v2g_work_solar_split")
+    p = sc.make_params(ENV)
+    mask = np.asarray(p.evse_v2g_mask)
+    n_real = int(np.asarray(p.evse_mask).sum())
+    assert mask.sum() == round(0.5 * n_real)
+    # bidirectional lanes are a subset of real lanes
+    assert np.all(mask <= np.asarray(p.evse_mask))
+    np.testing.assert_allclose(float(p.p_v2g_comp), 0.10)
+
+    guard = scenarios.make("v2g_degradation_guard").make_params(ENV)
+    assert float(guard.weights.degradation) == pytest.approx(0.05)
+
+    # no spread declared -> owner compensation collapses to p_sell (Eq. 2)
+    flat = scenarios.make("shopping_flat").make_params(ENV)
+    np.testing.assert_allclose(float(flat.p_v2g_comp), float(flat.p_sell))
+
+    with pytest.raises(ValueError, match="v2g_port_fraction"):
+        sc.evolve(name="bad", v2g_port_fraction=1.5).make_params(ENV)
+
+
+def test_ppo_trains_mixed_v2g_distribution_one_compile():
+    """allow_v2g PPO across the mixed v2g/non-v2g pack: one jitted train."""
+    from repro.core import ChargaxEnv as _Env, EnvConfig as _Cfg
+    from repro.rl import PPOConfig, make_train
+
+    env = _Env(_Cfg(allow_v2g=True))
+    stacked = scenarios.stack_params(
+        [scenarios.make(n).make_params(env) for n in scenarios.V2G_MIXED_PACK]
+    )
+    n_mix = len(scenarios.V2G_MIXED_PACK)
+    cfg = PPOConfig(
+        total_timesteps=n_mix * 16, num_envs=n_mix, rollout_steps=16,
+        num_minibatches=2, update_epochs=1, hidden=(16,),
+    )
+    train_fn = make_train(cfg, env, scenario_params=stacked)
+    # exogenous tables stay one-copy-per-scenario (never per-env)
+    assert train_fn.scenario_shape == (n_mix, 1)
+    out = jax.jit(train_fn)(jax.random.key(0))
+    assert np.all(np.isfinite(np.asarray(out["metrics"]["loss"])))
