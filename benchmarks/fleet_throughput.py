@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import EnvConfig, FleetEnv
+from repro.envs import FleetAdapter
 
 ARCHS = ("paper_16", "deep_4x4", "single_dc_8")
 SCENARIOS = ("shopping_pv_tou", "work_solar_summer", "highway_demand_charge")
@@ -39,10 +40,13 @@ def bench_fleet(n_replicas: int, n_days: int = 1, mesh=None) -> tuple[float, Fle
         EnvConfig(),
         scenarios=SCENARIOS * n_replicas,
     )
+    # the rollout drives the fleet through the Environment protocol: typed
+    # action space, TimeStep returns
+    env = FleetAdapter(fleet)
     steps = fleet.config.episode_steps * n_days
 
     with sharding.set_mesh(mesh) if mesh is not None else contextlib.nullcontext():
-        params = fleet.default_params
+        params = env.default_params
         if mesh is not None:
             params = env_sharding.place_env_batch(params, mesh)
 
@@ -51,20 +55,14 @@ def bench_fleet(n_replicas: int, n_days: int = 1, mesh=None) -> tuple[float, Fle
             def body(carry, _):
                 key, state = carry
                 key, ka, ks = jax.random.split(key, 3)
-                action = jax.random.randint(
-                    ka,
-                    (fleet.n_stations, fleet.num_action_heads),
-                    0,
-                    fleet.num_actions_per_head,
-                )
-                _, state, r, _, _ = fleet.step(ks, state, action, params)
-                return (key, state), jnp.sum(r)
+                ts = env.step(ks, state, env.sample_action(ka), params)
+                return (key, ts.state), jnp.sum(ts.reward)
 
             (_, state), rs = jax.lax.scan(body, (key, state), None, steps)
             return state, rs.sum()
 
         key = jax.random.key(0)
-        _, state = fleet.reset(key, params)
+        _, state = env.reset(key, params)
         if mesh is not None:
             state = env_sharding.place_env_batch(state, mesh)
         state2, _ = rollout(key, state)  # compile

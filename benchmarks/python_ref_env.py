@@ -68,12 +68,15 @@ class PythonChargax:
         return self._obs()
 
     def _obs(self):
-        # observation content mirrors ChargaxEnv.observe (shape parity only)
+        # observation content mirrors ChargaxEnv.observe (shape parity only):
+        # 8 features per port — the 5th (v2g_debt/cap) is always 0 here, the
+        # reference env has no V2G settlement
         feats = []
         for i in range(self.n):
             feats += [
                 self.occ[i], self.cur[i] / self.imax[i], self.soc[i],
                 self.e_rem[i] / max(self.cap[i], 1.0),
+                0.0,  # v2g_debt / cap
                 np.clip(self.t_rem[i] / self.spd, -1, 1),
                 self._rhat(i) / self.imax[i], self.utype[i],
             ]

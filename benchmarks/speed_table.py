@@ -10,6 +10,11 @@ validation target — the paper reports 27x-2820x vs CPU gym envs on a GPU):
              paper's "typical training scenario"); the Python row drives the
              Python env with the same jitted PPO maths (rollout on host —
              the SB3+CUDA analogue).
+
+Also records the ``repro.envs`` wrapper-stack overhead: the same random
+rollout through ``VmapWrapper`` vs the raw hand-vmapped step (target: <= 2%
+— the wrapper is trace-time sugar, both paths lower to the same program).
+Persisted to ``BENCH_speed.json`` as ``wrapper_overhead_frac``.
 """
 from __future__ import annotations
 
@@ -21,13 +26,14 @@ import numpy as np
 
 from benchmarks.python_ref_env import PythonChargax
 from repro.core import ChargaxEnv, EnvConfig
+from repro.envs import VmapWrapper
 from repro.rl import PPOConfig, make_train
 
 
-def bench_jax_random(n_steps: int = 100_000, n_envs: int = 1024) -> float:
-    """Seconds per n_steps env transitions, vmapped + jitted."""
-    env = ChargaxEnv(EnvConfig())
-    params = env.default_params
+def _make_random_rollout(env, venv, params, n_steps: int, n_envs: int, wrapped: bool):
+    """Jitted random rollout: via ``VmapWrapper`` (protocol path) or the
+    hand-vmapped ``env.step`` — identical computation, identical compiled
+    program."""
 
     @jax.jit
     def rollout(key, state):
@@ -37,25 +43,73 @@ def bench_jax_random(n_steps: int = 100_000, n_envs: int = 1024) -> float:
             actions = jax.random.randint(
                 ka, (n_envs, env.num_action_heads), 0, env.num_actions_per_head
             )
-            keys = jax.random.split(ks, n_envs)
-            _, state, r, d, _ = jax.vmap(env.step, in_axes=(0, 0, 0, None))(
-                keys, state, actions, params
-            )
+            if wrapped:
+                _, state, r, d, _ = venv.step(ks, state, actions, params)
+            else:
+                keys = jax.random.split(ks, n_envs)
+                _, state, r, d, _ = jax.vmap(env.step, in_axes=(0, 0, 0, None))(
+                    keys, state, actions, params
+                )
             return (key, state), r.sum()
 
         (_, state), rs = jax.lax.scan(body, (key, state), None, n_steps // n_envs)
         return state, rs.sum()
 
+    return rollout
+
+
+def bench_jax_random(
+    n_steps: int = 100_000, n_envs: int = 1024, wrapped: bool = False,
+    repeats: int = 1,
+) -> float:
+    """Seconds per n_steps env transitions, vmapped + jitted (best of N)."""
+    env = ChargaxEnv(EnvConfig())
+    params = env.default_params
+    venv = VmapWrapper(env, n_envs)
+    rollout = _make_random_rollout(env, venv, params, n_steps, n_envs, wrapped)
     key = jax.random.key(0)
-    _, state = jax.vmap(env.reset, in_axes=(0, None))(
-        jax.random.split(key, n_envs), params
-    )
-    state, _ = rollout(key, state)  # compile
-    jax.block_until_ready(state.t)
-    t0 = time.perf_counter()
-    state, s = rollout(key, state)
+    _, state = venv.reset(key, params)
+    st, s = rollout(key, state)  # compile
     jax.block_until_ready(s)
-    return time.perf_counter() - t0
+    best = float("inf")
+    for _ in range(max(repeats, 1)):
+        t0 = time.perf_counter()
+        _, s = rollout(key, state)
+        jax.block_until_ready(s)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_wrapper_overhead(
+    n_steps: int = 100_000, n_envs: int = 1024, rounds: int = 3,
+) -> tuple[float, float]:
+    """(seconds raw, seconds wrapped) for the same random rollout.
+
+    The two programs are identical computations (VmapWrapper is trace-time
+    sugar), so the timing rounds are *interleaved* raw/wrapped and the min
+    per path is reported — host-load drift between two back-to-back
+    measurements would otherwise masquerade as wrapper overhead.
+    """
+    env = ChargaxEnv(EnvConfig())
+    params = env.default_params
+    venv = VmapWrapper(env, n_envs)
+    raw = _make_random_rollout(env, venv, params, n_steps, n_envs, wrapped=False)
+    wrapped = _make_random_rollout(env, venv, params, n_steps, n_envs, wrapped=True)
+
+    key = jax.random.key(0)
+    _, state = venv.reset(key, params)
+    for fn in (raw, wrapped):  # compile both before any timing
+        st, s = fn(key, state)
+        jax.block_until_ready(s)
+
+    best = {False: float("inf"), True: float("inf")}
+    for _ in range(max(rounds, 1)):
+        for is_wrapped, fn in ((False, raw), (True, wrapped)):
+            t0 = time.perf_counter()
+            _, s = fn(key, state)
+            jax.block_until_ready(s)
+            best[is_wrapped] = min(best[is_wrapped], time.perf_counter() - t0)
+    return best[False], best[True]
 
 
 def bench_python_random(n_steps: int = 20_000) -> float:
@@ -174,11 +228,20 @@ def run(quick: bool = True) -> list[tuple[str, float, str]]:
     rows = []
     n_jax = 100_000
     n_py = 10_000 if quick else 50_000
-    t_jax = bench_jax_random(n_jax)
+    t_jax, t_wrapped = bench_wrapper_overhead(n_jax, rounds=4)
     t_py = bench_python_random(n_py)
     us_jax = t_jax / n_jax * 1e6
     us_py = t_py / n_py * 1e6
+    overhead = t_wrapped / t_jax - 1.0
     rows.append(("random_chargax_jax", us_jax, f"{n_jax/t_jax:,.0f} steps/s"))
+    rows.append(
+        (
+            "random_chargax_wrapped",
+            t_wrapped / n_jax * 1e6,
+            f"{n_jax/t_wrapped:,.0f} steps/s VmapWrapper "
+            f"overhead={overhead:+.2%} (target <=2%)",
+        )
+    )
     rows.append(("random_python_ref", us_py, f"{n_py/t_py:,.0f} steps/s"))
     rows.append(("random_speedup", us_py / us_jax, "x faster (paper: 27x-1144x)"))
 
@@ -198,6 +261,8 @@ def run(quick: bool = True) -> list[tuple[str, float, str]]:
         "num_envs": 16,
         "steps_per_sec": round(n_ppo / t_ppo16, 1),
         "random_env_steps_per_sec": round(n_jax / t_jax, 1),
+        "wrapped_env_steps_per_sec": round(n_jax / t_wrapped, 1),
+        "wrapper_overhead_frac": round(overhead, 4),
         "python_ref_steps_per_sec": round(n_py / t_py, 1),
     }
     return rows

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 
 from repro import scenarios
 from repro.core import ChargaxEnv, EnvConfig
+from repro.envs import VmapWrapper
 from repro.rl import PPOConfig, evaluate, make_ppo_policy, make_train
 from repro.rl.baselines import max_charge_policy, v2g_arbitrage_policy
 
@@ -34,23 +35,17 @@ TOU_SCENARIO = "v2g_shopping_tou"
 def _env_steps_per_sec(allow_v2g: bool, num_envs: int, steps: int) -> float:
     env = ChargaxEnv(EnvConfig(allow_v2g=allow_v2g))
     params = scenarios.make(TOU_SCENARIO).make_params(env)
-
-    v_reset = jax.vmap(env.reset, in_axes=(0, None))
-    v_step = jax.vmap(env.step, in_axes=(0, 0, 0, None))
+    venv = VmapWrapper(env, num_envs)  # protocol-path batching
 
     @jax.jit
     def rollout(key):
-        keys = jax.random.split(key, num_envs)
-        obs, state = v_reset(keys, params)
+        obs, state = venv.reset(key, params)
 
         def body(carry, _):
             state, key = carry
             key, k_act, k_step = jax.random.split(key, 3)
-            action = jax.random.randint(
-                k_act, (num_envs, env.num_action_heads), 0, env.num_actions_per_head
-            )
-            step_keys = jax.random.split(k_step, num_envs)
-            _, state, reward, _, _ = v_step(step_keys, state, action, params)
+            ts = venv.step(k_step, state, venv.sample_action(k_act), params)
+            state, reward = ts.state, ts.reward
             return (state, key), reward
 
         (state, _), rewards = jax.lax.scan(body, (state, key), None, steps)

@@ -8,6 +8,7 @@ import jax.numpy as jnp
 
 from repro import scenarios
 from repro.core import ChargaxEnv, EnvConfig, FleetEnv
+from repro.envs import FleetAdapter
 
 
 def main():
@@ -22,10 +23,14 @@ def main():
         EnvConfig(),
         scenarios=["shopping_pv_tou", "work_solar_summer", "highway_demand_charge"],
     )
-    params = fleet.default_params
+    # FleetAdapter presents the fleet through the Environment protocol:
+    # typed (S, ...) spaces + TimeStep returns
+    env = FleetAdapter(fleet)
+    params = env.default_params
     print(
         f"\nfleet: {fleet.n_stations} stations padded to "
-        f"{fleet.max_evse} lanes / {fleet.max_nodes} nodes each"
+        f"{fleet.max_evse} lanes / {fleet.max_nodes} nodes each; "
+        f"action_space: {env.action_space}"
     )
 
     # --- 3. a jitted 24h rollout in a single vmapped scan -------------------
@@ -33,17 +38,13 @@ def main():
 
     @jax.jit
     def rollout(key):
-        _, state = fleet.reset(key, params)
+        _, state = env.reset(key, params)
 
         def body(carry, _):
             key, state = carry
             key, ka, ks = jax.random.split(key, 3)
-            action = jax.random.randint(
-                ka, (fleet.n_stations, fleet.num_action_heads),
-                0, fleet.num_actions_per_head,
-            )
-            _, state, r, _, info = fleet.step(ks, state, action, params)
-            return (key, state), (r, info["e_pv"])
+            ts = env.step(ks, state, env.sample_action(ka), params)
+            return (key, ts.state), (ts.reward, ts.info["e_pv"])
 
         (_, state), (rewards, e_pv) = jax.lax.scan(body, (key, state), None, steps)
         return state, rewards, e_pv
@@ -63,11 +64,13 @@ def main():
     from repro.rl import PPOConfig, make_train
 
     env = ChargaxEnv(EnvConfig())
+    names = scenarios.names()
     stacked = scenarios.stack_params(
-        [scenarios.make(n).make_params(env) for n in scenarios.names()]
+        [scenarios.make(n).make_params(env) for n in names]
     )
-    cfg = PPOConfig(total_timesteps=40_000, num_envs=8, rollout_steps=100,
-                    hidden=(64, 64))
+    # one env per scenario: num_envs must be a multiple of the catalog size
+    cfg = PPOConfig(total_timesteps=40_000, num_envs=len(names),
+                    rollout_steps=100, hidden=(64, 64))
     print(f"\ntraining PPO over {len(scenarios.names())} scenarios ...")
     out = jax.jit(make_train(cfg, env, scenario_params=stacked))(jax.random.key(1))
     rr = out["metrics"]["rollout_reward"]

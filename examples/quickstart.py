@@ -19,15 +19,16 @@ def main():
     )
     key = jax.random.key(0)
     obs, state = env.reset(key)
-    print(f"obs dim: {obs.shape[0]}, action heads: {env.num_action_heads} "
-          f"x {env.num_actions_per_head} levels")
+    # typed spaces are the env's shape contract (repro.envs.spaces)
+    print(f"observation_space: {env.observation_space}, "
+          f"action_space: {env.action_space}")
 
     # --- 2. step it with the paper's max-charge baseline --------------------
     step = jax.jit(env.step)
-    action = make_baseline_max_action(env)
+    baseline = make_baseline_max_action(env)  # policy(params, key, obs)
     for t in range(12):  # one hour
         key, k = jax.random.split(key)
-        obs, state, reward, done, info = step(k, state, action)
+        obs, state, reward, done, info = step(k, state, baseline(None, k, obs))
     print(f"after 1h: {int(state.cars_served)} cars, "
           f"profit so far EUR {float(state.profit_cum):.2f}")
 

@@ -1,13 +1,17 @@
-"""Chargax environment — public API (gymnax-style functional env).
+"""Chargax environment — the canonical ``repro.envs.Environment`` implementation.
 
     env = ChargaxEnv(EnvConfig(scenario="shopping"))
     obs, state = env.reset(key)
-    obs, state, reward, done, info = env.step(key, state, action)
+    ts = env.step(key, state, action)            # ts: repro.envs.TimeStep
+    obs, state, reward, done, info = ts          # ...which unpacks as before
 
 ``reset``/``step`` are pure and jit/vmap/scan-compatible; all configuration
 that changes array *shapes* or python control flow lives in the static
 ``EnvConfig``, everything numeric lives in the ``EnvParams`` pytree so sweeps
-(alpha weights, price years, traffic levels) never recompile.
+(alpha weights, price years, traffic levels) never recompile.  Shapes and
+bounds are typed: ``env.observation_space`` / ``env.action_space``
+(:mod:`repro.envs.spaces`); batching, auto-reset and fleet composition come
+from the wrapper stack in :mod:`repro.envs.wrappers`.
 """
 from __future__ import annotations
 
@@ -29,6 +33,8 @@ from repro.core.transition import (
     decode_action,
     depart_cars,
 )
+from repro.envs import spaces
+from repro.envs.base import Environment, TimeStep
 from repro.utils import replace, steps_per_day
 
 
@@ -72,7 +78,7 @@ class EnvConfig:
         return self.dt_minutes / 60.0
 
 
-class ChargaxEnv:
+class ChargaxEnv(Environment):
     """Paper's environment. Instances are cheap; arrays live in ``default_params``."""
 
     def __init__(self, config: EnvConfig | None = None):
@@ -186,26 +192,40 @@ class ChargaxEnv:
         )
 
     # ------------------------------------------------------------------
-    # Spaces
+    # Spaces (the typed source of truth; the integer properties below are
+    # thin aliases kept for existing call sites)
     # ------------------------------------------------------------------
+    @cached_property
+    def action_space(self) -> spaces.MultiDiscrete:
+        """N EVSE heads + 1 battery head (paper: battery = (N+1)-th pole),
+        each with ``2 * discretization + 1`` levels."""
+        return spaces.MultiDiscrete(
+            np.full((self.n_evse + 1,), 2 * self.config.discretization + 1)
+        )
+
+    @cached_property
+    def observation_space(self) -> spaces.Box:
+        """Flat float32 observation.
+
+        Layout (8 features per port since the V2G debt feature): ``8 * n_evse``
+        port features [occupied, current/imax, soc, e_remain/cap, v2g_debt/cap,
+        t_remain/spd, rhat/imax, user_type], 2 battery features, 4 time
+        features, 3 price features — see :meth:`observe`.
+        """
+        n = self.n_evse
+        return spaces.Box(-np.inf, np.inf, (8 * n + 2 + 4 + 3,))
+
     @property
     def num_action_heads(self) -> int:
-        """N EVSEs + 1 battery head (paper: battery = (N+1)-th pole)."""
-        return self.n_evse + 1
+        return self.action_space.shape[0]
 
     @property
     def num_actions_per_head(self) -> int:
-        return 2 * self.config.discretization + 1
+        return self.action_space.num_categories
 
     @property
     def obs_dim(self) -> int:
-        n = self.n_evse
-        return 8 * n + 2 + 4 + 3  # ports, battery, time feats, price feats
-
-    def sample_action(self, key: jax.Array) -> jnp.ndarray:
-        return jax.random.randint(
-            key, (self.num_action_heads,), 0, self.num_actions_per_head
-        )
+        return self.observation_space.shape[0]
 
     # ------------------------------------------------------------------
     # Reset / step
@@ -253,7 +273,7 @@ class ChargaxEnv:
         state: EnvState,
         action: jnp.ndarray,
         params: EnvParams | None = None,
-    ) -> tuple[jnp.ndarray, EnvState, jnp.ndarray, jnp.ndarray, dict]:
+    ) -> TimeStep:
         params = params if params is not None else self.default_params
         cfg = self.config
         dt = cfg.dt_hours
@@ -353,7 +373,7 @@ class ChargaxEnv:
             "arrived": arrived.n_arrived.astype(jnp.float32),
             "price_buy": p_buy,
         }
-        return self.observe(new_state, params), new_state, reward, done, info
+        return TimeStep(self.observe(new_state, params), new_state, reward, done, info)
 
     # ------------------------------------------------------------------
     # Observation
@@ -397,11 +417,21 @@ class ChargaxEnv:
         return jnp.concatenate([port_feats, batt_feats, time_feats, price_feats])
 
 
-def make_baseline_max_action(env: ChargaxEnv) -> jnp.ndarray:
-    """Paper's baseline: 'always charge to maximum potential'.
+def make_baseline_max_action(env: ChargaxEnv):
+    """Paper's baseline as a policy: 'always charge to maximum potential'.
 
-    Max level on every EVSE head; battery idle (centre level).
+    Max level on every EVSE head; battery idle (centre level).  Returns a
+    ``policy(params, key, obs) -> action`` callable like every other
+    baseline (``repro.rl.baselines``) — the historical version returned a
+    bare action array, the odd one out.  ``obs``'s leading axes set the
+    batch shape; ``params``/``key`` are ignored (the policy is constant).
     """
     d = env.config.discretization
-    a = jnp.full((env.num_action_heads,), 2 * d, dtype=jnp.int32)
-    return a.at[-1].set(d)  # battery: 0 amps
+    space = env.action_space
+    a = jnp.full(space.shape, 2 * d, dtype=space.dtype)
+    a = a.at[..., -1].set(d)  # battery: 0 amps
+
+    def policy(params, key, obs):
+        return jnp.broadcast_to(a, jnp.shape(obs)[:-1] + a.shape)
+
+    return policy

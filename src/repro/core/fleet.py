@@ -36,23 +36,12 @@ from repro.core import station
 from repro.core.env import ChargaxEnv, EnvConfig
 from repro.core.state import EnvParams, EnvState, RewardWeights
 from repro.distributed import env_sharding
+from repro.utils import stack_pytrees
 
-def stack_params(params_list: Sequence[EnvParams]) -> EnvParams:
-    """Stack same-shape parameter pytrees along a new leading station axis."""
-    structures = {jax.tree_util.tree_structure(p) for p in params_list}
-    if len(structures) != 1:
-        raise ValueError("parameter pytrees have different structures")
-
-    def stack(path, *xs):
-        shapes = {jnp.shape(x) for x in xs}
-        if len(shapes) != 1:
-            raise ValueError(
-                f"cannot stack params: leaf {jax.tree_util.keystr(path)} has "
-                f"per-entry shapes {[jnp.shape(x) for x in xs]}"
-            )
-        return jnp.stack([jnp.asarray(x) for x in xs])
-
-    return jax.tree_util.tree_map_with_path(stack, *params_list)
+# the one shared pytree-stacking helper (repro.utils.stack_pytrees): fleets
+# stack a station axis, the scenario subsystem stacks a scenario axis —
+# both names resolve to the same function
+stack_params = stack_pytrees
 
 
 class FleetEnv:

@@ -1,0 +1,36 @@
+"""Unified functional environment protocol + composable wrapper stack.
+
+    from repro.envs import AutoReset, VmapWrapper
+    env  = ChargaxEnv(EnvConfig())                   # implements Environment
+    wenv = AutoReset(VmapWrapper(env, num_envs=16))  # batched + autoreset
+    obs, state = wenv.reset(key, params)
+    obs, state, reward, done, info = wenv.step(key, state, action, params)
+
+See :mod:`repro.envs.base` for the protocol, :mod:`repro.envs.spaces` for
+typed spaces, :mod:`repro.envs.wrappers` for the stack and
+:mod:`repro.envs.gym_bridge` for the optional non-JAX surface.
+"""
+from repro.envs import spaces
+from repro.envs.base import Environment, TimeStep
+from repro.envs.gym_bridge import GymnasiumBridge
+from repro.envs.wrappers import (
+    AutoReset,
+    FleetAdapter,
+    LogState,
+    LogWrapper,
+    VmapWrapper,
+    Wrapper,
+)
+
+__all__ = [
+    "AutoReset",
+    "Environment",
+    "FleetAdapter",
+    "GymnasiumBridge",
+    "LogState",
+    "LogWrapper",
+    "TimeStep",
+    "VmapWrapper",
+    "Wrapper",
+    "spaces",
+]

@@ -1,0 +1,97 @@
+"""The functional ``Environment`` protocol (Jumanji/gymnax-style).
+
+Every Chargax environment — the single station, fleets, and anything a
+wrapper produces — speaks one typed interface:
+
+    obs, state = env.reset(key, params)
+    ts = env.step(key, state, action, params)      # ts: TimeStep
+
+``reset``/``step`` are pure and jit/vmap/scan-compatible; ``params`` is a
+numeric pytree (``None`` selects ``env.default_params``) so sweeps and
+scenario swaps never recompile.  :class:`TimeStep` is a NamedTuple and
+therefore *unpacks exactly like the historical 5-tuple*::
+
+    obs, state, reward, done, info = env.step(key, state, action, params)
+
+so protocol adoption is non-breaking for tuple-style consumers while typed
+consumers can write ``ts.obs`` / ``ts.reward``.
+
+Shapes and bounds live in typed :mod:`repro.envs.spaces` objects
+(``observation_space`` / ``action_space``), replacing the scattered
+``obs_dim`` / ``num_action_heads`` / ``num_actions_per_head`` integers —
+those remain available as thin aliases derived *from* the spaces.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.spaces import Space
+
+
+class TimeStep(NamedTuple):
+    """One environment transition.  Unpacks as ``(obs, state, reward, done,
+    info)`` — field access (``ts.reward``) and tuple unpacking both work, and
+    the NamedTuple is a pytree so it threads through jit/vmap/scan."""
+
+    obs: Any
+    state: Any
+    reward: jnp.ndarray
+    done: jnp.ndarray
+    info: dict
+
+
+class Environment(abc.ABC):
+    """Functional environment protocol.
+
+    Implementations must be *pure*: all randomness comes from the ``key``
+    argument, all mutable quantities live in ``state``, and every number that
+    may change between runs lives in the ``params`` pytree (shape-affecting
+    configuration belongs in static env construction).
+    """
+
+    # ------------------------------------------------------------------
+    # Core interface
+    # ------------------------------------------------------------------
+    @abc.abstractmethod
+    def reset(self, key: jax.Array, params: Any | None = None) -> tuple[Any, Any]:
+        """Start an episode: ``(obs, state)``."""
+
+    @abc.abstractmethod
+    def step(
+        self, key: jax.Array, state: Any, action: Any, params: Any | None = None
+    ) -> TimeStep:
+        """Advance one transition and return a :class:`TimeStep`."""
+
+    @property
+    def default_params(self) -> Any:
+        """Parameter pytree used when ``params=None``."""
+        raise NotImplementedError(f"{type(self).__name__} has no default_params")
+
+    # ------------------------------------------------------------------
+    # Spaces
+    # ------------------------------------------------------------------
+    @property
+    @abc.abstractmethod
+    def observation_space(self) -> Space:
+        """Typed observation space."""
+
+    @property
+    @abc.abstractmethod
+    def action_space(self) -> Space:
+        """Typed action space."""
+
+    def sample_action(self, key: jax.Array) -> jnp.ndarray:
+        """One uniform action from ``action_space`` (jit-compatible)."""
+        return self.action_space.sample(key)
+
+    # ------------------------------------------------------------------
+    # Wrapper plumbing
+    # ------------------------------------------------------------------
+    @property
+    def unwrapped(self) -> "Environment":
+        """The innermost environment (wrappers override)."""
+        return self

@@ -1,0 +1,108 @@
+"""``GymnasiumBridge`` — the protocol for non-JAX consumers (SB3, CleanRL...).
+
+EV2Gym (Orfanoudakis et al., 2024) shows a Gym-compatible surface is what
+makes an EV-charging simulator adoptable outside its home stack; this bridge
+wraps any functional :class:`~repro.envs.base.Environment` into a stateful
+``gymnasium.Env``: numpy in/out, an internally-carried PRNG key, jitted
+``reset``/``step`` under the hood (so the Python-loop overhead is the only
+cost vs the pure-JAX path).
+
+gymnasium is an *optional* dependency: importing this module never requires
+it; constructing the bridge without it raises a helpful ``ImportError``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.envs import spaces as repro_spaces
+from repro.envs.base import Environment
+
+try:  # optional dependency — the bridge only exists for non-JAX consumers
+    import gymnasium as _gym
+
+    _GymEnvBase: type = _gym.Env
+except ImportError:  # pragma: no cover - exercised on gymnasium-less installs
+    _gym = None
+    _GymEnvBase = object
+
+
+def _to_gym_space(space: repro_spaces.Space):
+    if isinstance(space, repro_spaces.Box):
+        return _gym.spaces.Box(
+            low=space.low.astype(np.float32),
+            high=space.high.astype(np.float32),
+            shape=space.shape,
+            dtype=np.float32,
+        )
+    if isinstance(space, repro_spaces.MultiDiscrete):
+        if space.nvec.ndim != 1:
+            raise ValueError(
+                f"gymnasium MultiDiscrete needs a 1-D nvec, got {space.shape}"
+            )
+        return _gym.spaces.MultiDiscrete(space.nvec.astype(np.int64))
+    if isinstance(space, repro_spaces.Discrete):
+        return _gym.spaces.Discrete(space.n)
+    raise TypeError(f"cannot convert {type(space).__name__} to a gymnasium space")
+
+
+class GymnasiumBridge(_GymEnvBase):
+    """A stateful ``gymnasium.Env`` view of a functional environment.
+
+    Wraps a *single-instance* env (scalar reward/done): batched envs
+    (``VmapWrapper``, ``FleetAdapter``) have multi-axis action spaces and are
+    rejected at construction — gymnasium's vector API is a different
+    contract.  Chargax episodes end at a fixed horizon, so ``done`` maps to
+    gymnasium's *truncated* flag (``terminated`` stays False).  ``info``
+    leaves are converted to numpy scalars/arrays.
+    """
+
+    metadata = {"render_modes": []}
+
+    def __init__(self, env: Environment, params: Any | None = None, seed: int = 0):
+        if _gym is None:
+            raise ImportError(
+                "GymnasiumBridge requires the optional 'gymnasium' package "
+                "(pip install gymnasium); the pure-JAX protocol has no such "
+                "dependency"
+            )
+        self._env = env
+        self._params = params if params is not None else env.default_params
+        self._key = jax.random.key(seed)
+        self._state: Any = None
+        self._jit_reset = jax.jit(env.reset)
+        self._jit_step = jax.jit(env.step)
+        self.observation_space = _to_gym_space(env.observation_space)
+        self.action_space = _to_gym_space(env.action_space)
+
+    # ------------------------------------------------------------------
+    def _next_key(self) -> jax.Array:
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def reset(self, *, seed: int | None = None, options: dict | None = None):
+        if seed is not None:
+            self._key = jax.random.key(seed)
+        obs, self._state = self._jit_reset(self._next_key(), self._params)
+        return np.asarray(obs), {}
+
+    def step(self, action):
+        ts = self._jit_step(
+            self._next_key(),
+            self._state,
+            jnp.asarray(action, jnp.int32),
+            self._params,
+        )
+        self._state = ts.state
+        info = {k: np.asarray(v) for k, v in ts.info.items()}
+        # fixed-horizon episode end -> truncation, not termination
+        return np.asarray(ts.obs), float(ts.reward), False, bool(ts.done), info
+
+    def render(self):  # pragma: no cover - nothing to draw
+        return None
+
+    def close(self):
+        return None

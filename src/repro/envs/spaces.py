@@ -1,0 +1,182 @@
+"""Typed observation/action spaces for the functional ``Environment`` protocol.
+
+Jumanji/gymnax-style: a :class:`Space` describes the shape, dtype and bounds
+of one side of the env interface, replacing the scattered
+``obs_dim``/``num_action_heads``/``num_actions_per_head`` integers that every
+consumer used to re-derive.  Spaces are plain Python objects (never traced);
+``sample`` is jit/vmap-compatible and ``contains`` is a host-side check used
+by tests and the Gymnasium bridge.
+
+``batch(space, n)`` prepends a batch axis — how :class:`~repro.envs.wrappers.
+VmapWrapper` and :class:`~repro.envs.wrappers.FleetAdapter` derive their
+batched spaces from the single-env ones.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Space(abc.ABC):
+    """Base space: shape + dtype + sampling + membership."""
+
+    shape: tuple[int, ...]
+    dtype: Any
+
+    @abc.abstractmethod
+    def sample(self, key: jax.Array) -> jnp.ndarray:
+        """Draw one element of the space (jit/vmap-compatible)."""
+
+    @abc.abstractmethod
+    def contains(self, x: Any) -> bool:
+        """Host-side membership check (shape, dtype kind, bounds)."""
+
+
+class Box(Space):
+    """Continuous n-dimensional box ``[low, high]`` (possibly unbounded).
+
+    ``low``/``high`` may be scalars (broadcast) or arrays of ``shape``.
+    """
+
+    def __init__(
+        self,
+        low: float | np.ndarray,
+        high: float | np.ndarray,
+        shape: tuple[int, ...],
+        dtype: Any = jnp.float32,
+    ):
+        self.shape = tuple(int(s) for s in shape)
+        self.dtype = dtype
+        self.low = np.broadcast_to(np.asarray(low, np.float64), self.shape)
+        self.high = np.broadcast_to(np.asarray(high, np.float64), self.shape)
+
+    def sample(self, key: jax.Array) -> jnp.ndarray:
+        # uniform inside finite bounds; standard normal along unbounded axes
+        finite = np.isfinite(self.low) & np.isfinite(self.high)
+        lo = jnp.asarray(np.where(finite, self.low, 0.0), self.dtype)
+        hi = jnp.asarray(np.where(finite, self.high, 1.0), self.dtype)
+        ku, kn = jax.random.split(key)
+        u = jax.random.uniform(ku, self.shape, self.dtype, lo, hi)
+        n = jax.random.normal(kn, self.shape, self.dtype)
+        return jnp.where(jnp.asarray(finite), u, n)
+
+    def contains(self, x: Any) -> bool:
+        x = np.asarray(x)
+        return bool(
+            x.shape == self.shape
+            and np.all(x >= self.low - 1e-6)
+            and np.all(x <= self.high + 1e-6)
+        )
+
+    def __repr__(self) -> str:
+        lo = float(self.low.min()) if self.low.size else -np.inf
+        hi = float(self.high.max()) if self.high.size else np.inf
+        return f"Box({lo:g}, {hi:g}, shape={self.shape})"
+
+    def __eq__(self, other: Any) -> bool:
+        return (
+            isinstance(other, Box)
+            and self.shape == other.shape
+            and np.array_equal(self.low, other.low)
+            and np.array_equal(self.high, other.high)
+        )
+
+
+class Discrete(Space):
+    """A single categorical choice in ``{0, ..., n-1}``."""
+
+    def __init__(self, n: int, dtype: Any = jnp.int32):
+        self.n = int(n)
+        self.shape = ()
+        self.dtype = dtype
+
+    def sample(self, key: jax.Array) -> jnp.ndarray:
+        return jax.random.randint(key, self.shape, 0, self.n, self.dtype)
+
+    def contains(self, x: Any) -> bool:
+        x = np.asarray(x)
+        return bool(
+            x.shape == ()
+            and np.issubdtype(x.dtype, np.integer)
+            and 0 <= int(x) < self.n
+        )
+
+    def __repr__(self) -> str:
+        return f"Discrete({self.n})"
+
+    def __eq__(self, other: Any) -> bool:
+        return isinstance(other, Discrete) and self.n == other.n
+
+
+class MultiDiscrete(Space):
+    """A grid of categorical choices: ``nvec[i...]`` options per element.
+
+    Chargax's action space is the uniform case — ``(n_evse + 1)`` heads with
+    ``2 * discretization + 1`` levels each (paper Table 3; the battery is the
+    last head).  ``num_categories`` exposes the per-head count when uniform.
+    """
+
+    def __init__(self, nvec: Any, dtype: Any = jnp.int32):
+        self.nvec = np.asarray(nvec, np.int64)
+        if self.nvec.ndim == 0:
+            self.nvec = self.nvec[None]
+        self.shape = self.nvec.shape
+        self.dtype = dtype
+
+    @property
+    def num_categories(self) -> int:
+        """Per-element category count — defined only for uniform grids."""
+        n = np.unique(self.nvec)
+        if n.size != 1:
+            raise ValueError(f"non-uniform MultiDiscrete: nvec spans {n}")
+        return int(n[0])
+
+    def sample(self, key: jax.Array) -> jnp.ndarray:
+        n = np.unique(self.nvec)
+        if n.size == 1:  # uniform grid: one randint, same draws as the
+            # historical env.sample_action implementations
+            return jax.random.randint(key, self.shape, 0, int(n[0]), self.dtype)
+        u = jax.random.uniform(key, self.shape)
+        return jnp.floor(u * jnp.asarray(self.nvec)).astype(self.dtype)
+
+    def contains(self, x: Any) -> bool:
+        x = np.asarray(x)
+        return bool(
+            x.shape == self.shape
+            and np.issubdtype(x.dtype, np.integer)
+            and np.all(x >= 0)
+            and np.all(x < self.nvec)
+        )
+
+    def __repr__(self) -> str:
+        try:
+            return f"MultiDiscrete({self.num_categories} x {self.shape})"
+        except ValueError:
+            return f"MultiDiscrete(nvec={self.nvec.tolist()})"
+
+    def __eq__(self, other: Any) -> bool:
+        return isinstance(other, MultiDiscrete) and np.array_equal(
+            self.nvec, other.nvec
+        )
+
+
+def batch(space: Space, n: int) -> Space:
+    """Prepend a batch axis of size ``n`` to ``space``."""
+    if isinstance(space, Box):
+        return Box(
+            np.broadcast_to(space.low, (n,) + space.shape),
+            np.broadcast_to(space.high, (n,) + space.shape),
+            (n,) + space.shape,
+            space.dtype,
+        )
+    if isinstance(space, MultiDiscrete):
+        return MultiDiscrete(
+            np.broadcast_to(space.nvec, (n,) + space.shape), space.dtype
+        )
+    if isinstance(space, Discrete):
+        return MultiDiscrete(np.full((n,), space.n), space.dtype)
+    raise TypeError(f"cannot batch {type(space).__name__}")

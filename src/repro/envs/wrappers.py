@@ -1,0 +1,310 @@
+"""Composable wrappers over the functional :class:`~repro.envs.base.Environment`.
+
+The stack replaces the per-consumer vmap/autoreset glue that used to live in
+``rl/ppo.py`` (``nest``/``flat``/``v_reset``/``v_step``), ``rl/eval.py`` and
+the benchmarks.  Each wrapper is proven bit-identical to the hand-rolled
+pattern it absorbs (``tests/envs/test_wrappers.py``):
+
+======================  =====================================================
+``AutoReset``           restarts finished episodes inside ``step`` (the
+                        PureJaxRL where(done) pattern)
+``LogWrapper``          episode return/length accounting surfaced in ``info``
+``VmapWrapper``         batches an env over a leading axis; supports the
+                        nested scenario×env layout (S-axis tables, one copy
+                        per scenario) and per-env stacked params
+``FleetAdapter``        presents :class:`~repro.core.fleet.FleetEnv` through
+                        the protocol (TimeStep returns + batched spaces)
+``GymnasiumBridge``     non-JAX consumers — see :mod:`repro.envs.gym_bridge`
+======================  =====================================================
+
+Canonical single-env composition (what PPO builds internally)::
+
+    env   = ChargaxEnv(EnvConfig())
+    wenv  = AutoReset(VmapWrapper(env, num_envs))       # batched, autoreset
+    obs, state = wenv.reset(key, params)
+    ts = wenv.step(key, state, action, params)          # ts.done marks ends
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs import spaces
+from repro.envs.base import Environment, TimeStep
+
+
+class Wrapper(Environment):
+    """Delegating base wrapper: behaves exactly like the wrapped env."""
+
+    def __init__(self, env: Environment):
+        self._env = env
+
+    def __getattr__(self, name: str) -> Any:
+        if name.startswith("_"):
+            raise AttributeError(name)
+        return getattr(self._env, name)
+
+    # -- protocol delegation -------------------------------------------
+    def reset(self, key: jax.Array, params: Any | None = None):
+        return self._env.reset(key, params)
+
+    def step(self, key: jax.Array, state: Any, action: Any, params: Any | None = None):
+        return self._env.step(key, state, action, params)
+
+    @property
+    def default_params(self) -> Any:
+        return self._env.default_params
+
+    @property
+    def observation_space(self) -> spaces.Space:
+        return self._env.observation_space
+
+    @property
+    def action_space(self) -> spaces.Space:
+        return self._env.action_space
+
+    @property
+    def unwrapped(self) -> Environment:
+        return self._env.unwrapped
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}({self._env!r})"
+
+
+def _where_done(done: jnp.ndarray, on_done: Any, otherwise: Any) -> Any:
+    """``where(done, a, b)`` with ``done`` broadcast along trailing axes —
+    the exact select PPO's hand-rolled auto-reset used."""
+
+    def sel(r, n):
+        d = done.reshape(done.shape + (1,) * (n.ndim - done.ndim))
+        return jnp.where(d, r, n)
+
+    return jax.tree_util.tree_map(sel, on_done, otherwise)
+
+
+class AutoReset(Wrapper):
+    """Restart finished episodes inside ``step``.
+
+    ``step`` consumes one key, split into a step key and a reset key; where
+    ``done`` the returned obs/state are a fresh ``reset`` (reward, done and
+    info still describe the *finishing* transition, so returns/GAE see the
+    terminal step).  Composes above :class:`VmapWrapper` — the inner env
+    splits each key per environment — which reproduces PPO's historical
+    vmapped step + vmapped reset + ``where(done)`` path bit-for-bit.
+    """
+
+    def step(
+        self, key: jax.Array, state: Any, action: Any, params: Any | None = None
+    ) -> TimeStep:
+        k_step, k_reset = jax.random.split(key)
+        ts = self._env.step(k_step, state, action, params)
+        r_obs, r_state = self._env.reset(k_reset, params)
+        obs = _where_done(ts.done, r_obs, ts.obs)
+        new_state = _where_done(ts.done, r_state, ts.state)
+        return TimeStep(obs, new_state, ts.reward, ts.done, ts.info)
+
+
+class LogState(NamedTuple):
+    """Episode accounting carried alongside the wrapped env state."""
+
+    env_state: Any
+    episode_return: jnp.ndarray
+    episode_length: jnp.ndarray
+    returned_episode_return: jnp.ndarray
+    returned_episode_length: jnp.ndarray
+
+
+class LogWrapper(Wrapper):
+    """Track episode return/length; surface the *last finished* episode's
+    totals in ``info`` (PureJaxRL's LogWrapper semantics).
+
+    Adds ``info["episode_return"]`` / ``info["episode_length"]`` (values of
+    the most recently completed episode, frozen between episode ends) and
+    ``info["returned_episode"]`` (this step finished an episode).  Wrap it
+    *outside* :class:`AutoReset` so the running totals survive the restart.
+    """
+
+    def reset(self, key: jax.Array, params: Any | None = None):
+        obs, env_state = self._env.reset(key, params)
+        batch = jnp.shape(obs)[:-1]
+        zf = jnp.zeros(batch, jnp.float32)
+        zi = jnp.zeros(batch, jnp.int32)
+        return obs, LogState(env_state, zf, zi, zf, zi)
+
+    def step(
+        self, key: jax.Array, state: LogState, action: Any, params: Any | None = None
+    ) -> TimeStep:
+        ts = self._env.step(key, state.env_state, action, params)
+        ep_ret = state.episode_return + ts.reward
+        ep_len = state.episode_length + 1
+        done = ts.done
+        new_state = LogState(
+            env_state=ts.state,
+            episode_return=jnp.where(done, 0.0, ep_ret),
+            episode_length=jnp.where(done, 0, ep_len),
+            returned_episode_return=jnp.where(
+                done, ep_ret, state.returned_episode_return
+            ),
+            returned_episode_length=jnp.where(
+                done, ep_len, state.returned_episode_length
+            ),
+        )
+        info = dict(ts.info)
+        info["episode_return"] = new_state.returned_episode_return
+        info["episode_length"] = new_state.returned_episode_length
+        info["returned_episode"] = done
+        return TimeStep(ts.obs, new_state, ts.reward, done, info)
+
+
+class VmapWrapper(Wrapper):
+    """Batch an environment over a leading axis of ``num_envs``.
+
+    ``reset``/``step`` take ONE key and split it into ``num_envs`` per-env
+    keys — exactly the ``jax.random.split(k, num_envs)`` discipline the
+    hand-rolled consumers used, so same keys give bit-identical rollouts.
+
+    Three parameter layouts:
+
+    * default — one params pytree broadcast to every env
+      (``in_axes=(0, None)``);
+    * ``params_axis=0`` — a stacked ``(num_envs, ...)`` pytree mapped
+      per-env (the ``rl.eval`` per-episode scenario/fleet layout);
+    * ``num_scenarios=S`` — the nested scenario×env layout from PR 2: the
+      batch is viewed as ``(S, num_envs // S)``, the *outer* vmap maps the
+      stacked scenario tables (leading axis S — one copy per scenario,
+      never per env) and the *inner* vmap broadcasts each scenario's params
+      to its block of envs.  Inputs/outputs stay flat ``(num_envs, ...)``;
+      the (S, E) nesting is internal.
+    """
+
+    def __init__(
+        self,
+        env: Environment,
+        num_envs: int,
+        params_axis: int | None = None,
+        num_scenarios: int | None = None,
+    ):
+        super().__init__(env)
+        if num_envs < 1:
+            raise ValueError(f"num_envs must be >= 1, got {num_envs}")
+        if num_scenarios is not None:
+            if params_axis is not None:
+                raise ValueError("pass either params_axis or num_scenarios, not both")
+            if num_envs % num_scenarios != 0:
+                raise ValueError(
+                    f"num_envs={num_envs} is not a multiple of "
+                    f"{num_scenarios} scenarios: the nested vmap assigns "
+                    "num_envs // S envs per scenario"
+                )
+        self.num_envs = int(num_envs)
+        self.params_axis = params_axis
+        self.num_scenarios = num_scenarios
+        if num_scenarios is not None:
+            self._n_per = num_envs // num_scenarios
+            self._v_reset = jax.vmap(
+                jax.vmap(env.reset, in_axes=(0, None)), in_axes=(0, 0)
+            )
+            self._v_step = jax.vmap(
+                jax.vmap(env.step, in_axes=(0, 0, 0, None)), in_axes=(0, 0, 0, 0)
+            )
+        else:
+            self._v_reset = jax.vmap(env.reset, in_axes=(0, params_axis))
+            self._v_step = jax.vmap(env.step, in_axes=(0, 0, 0, params_axis))
+
+    # -- (num_envs, ...) <-> (S, E, ...) views --------------------------
+    def _nest(self, tree: Any) -> Any:
+        return jax.tree_util.tree_map(
+            lambda x: x.reshape(
+                (self.num_scenarios, self._n_per) + x.shape[1:]
+            ),
+            tree,
+        )
+
+    def _flat(self, tree: Any) -> Any:
+        return jax.tree_util.tree_map(
+            lambda x: x.reshape((self.num_envs,) + x.shape[2:]), tree
+        )
+
+    def _resolve(self, params: Any | None) -> Any:
+        if params is not None:
+            return params
+        if self.params_axis is not None or self.num_scenarios is not None:
+            raise ValueError(
+                "stacked-params VmapWrapper needs explicit params: the inner "
+                "env's default_params has no leading stack axis"
+            )
+        return self._env.default_params
+
+    @property
+    def default_params(self) -> Any:
+        # route through _resolve so the stacked-params modes raise their
+        # informative error instead of handing back an unstacked pytree
+        return self._resolve(None)
+
+    # -- protocol ------------------------------------------------------
+    def reset(self, key: jax.Array, params: Any | None = None):
+        params = self._resolve(params)
+        keys = jax.random.split(key, self.num_envs)
+        if self.num_scenarios is None:
+            return self._v_reset(keys, params)
+        obs, state = self._v_reset(self._nest(keys), params)
+        return self._flat(obs), self._flat(state)
+
+    def step(
+        self, key: jax.Array, state: Any, action: Any, params: Any | None = None
+    ) -> TimeStep:
+        params = self._resolve(params)
+        keys = jax.random.split(key, self.num_envs)
+        if self.num_scenarios is None:
+            return self._v_step(keys, state, action, params)
+        ts = self._v_step(
+            self._nest(keys), self._nest(state), self._nest(action), params
+        )
+        return TimeStep(
+            self._flat(ts.obs),
+            self._flat(ts.state),
+            self._flat(ts.reward),
+            self._flat(ts.done),
+            self._flat(ts.info),
+        )
+
+    @property
+    def observation_space(self) -> spaces.Space:
+        return spaces.batch(self._env.observation_space, self.num_envs)
+
+    @property
+    def action_space(self) -> spaces.Space:
+        return spaces.batch(self._env.action_space, self.num_envs)
+
+
+class FleetAdapter(Wrapper):
+    """Present a :class:`~repro.core.fleet.FleetEnv` through the protocol.
+
+    ``FleetEnv`` stays a thin vmapped implementation with its historical
+    tuple-returning ``step``; the adapter adds :class:`TimeStep` returns and
+    the ``(n_stations, ...)``-batched spaces so fleets compose with the rest
+    of the wrapper stack (e.g. ``AutoReset(FleetAdapter(fleet))`` — the
+    fleet's per-station ``done`` broadcasts through the auto-reset select).
+    """
+
+    def step(
+        self, key: jax.Array, state: Any, action: Any, params: Any | None = None
+    ) -> TimeStep:
+        obs, state, reward, done, info = self._env.step(key, state, action, params)
+        return TimeStep(obs, state, reward, done, info)
+
+    @property
+    def observation_space(self) -> spaces.Space:
+        return spaces.batch(
+            self._env.template.observation_space, self._env.n_stations
+        )
+
+    @property
+    def action_space(self) -> spaces.Space:
+        return spaces.batch(self._env.template.action_space, self._env.n_stations)
+
+    @property
+    def unwrapped(self) -> Any:
+        return self._env

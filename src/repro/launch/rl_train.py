@@ -83,6 +83,8 @@ def run_train(args):
     env = ChargaxEnv(
         EnvConfig(scenario=args.scenario, traffic=args.traffic, allow_v2g=args.v2g)
     )
+    # typed env surface (repro.envs): PPO wraps this in AutoReset(VmapWrapper)
+    print(f"[ppo] obs={env.observation_space} actions={env.action_space}")
     cfg = PPOConfig(
         total_timesteps=args.timesteps,
         num_envs=args.num_envs,

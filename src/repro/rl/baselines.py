@@ -1,38 +1,45 @@
-"""Rule-based baselines (paper §5: 'always charge to maximum potential')."""
+"""Rule-based baselines (paper §5: 'always charge to maximum potential').
+
+Every baseline is a factory ``make(env, ...) -> policy`` where ``policy`` is
+a ``(params, key, obs) -> action`` callable typed against the env's
+``action_space`` (:mod:`repro.envs.spaces`): actions have the space's shape
+appended to ``obs``'s batch shape, with values in ``[0, num_categories)``.
+Constant policies ignore ``params``/``key``.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.env import ChargaxEnv
+from repro.core.env import make_baseline_max_action
 from repro.core.state import EnvParams
+from repro.envs import Environment
 
 
-def max_charge_policy(env: ChargaxEnv):
-    """Paper's baseline: max level at every EVSE, battery idle."""
-    d = env.config.discretization
-    a = jnp.full((env.num_action_heads,), 2 * d, dtype=jnp.int32).at[-1].set(d)
-
-    def policy(params, key, obs):
-        return jnp.broadcast_to(a, obs.shape[:-1] + a.shape)
-
-    return policy
+def max_charge_policy(env: Environment):
+    """Paper's baseline: max level at every EVSE, battery idle (the policy
+    form of :func:`repro.core.env.make_baseline_max_action`)."""
+    return make_baseline_max_action(env)
 
 
-def random_policy(env: ChargaxEnv):
+def random_policy(env: Environment):
+    space = env.action_space
+
     def policy(params, key, obs):
         return jax.random.randint(
-            key, obs.shape[:-1] + (env.num_action_heads,), 0, env.num_actions_per_head
+            key, jnp.shape(obs)[:-1] + space.shape, 0, space.num_categories,
+            space.dtype,
         )
 
     return policy
 
 
-def price_threshold_policy(env: ChargaxEnv, low_frac: float = 0.4):
+def price_threshold_policy(env: Environment, low_frac: float = 0.4):
     """Heuristic: full charge when the current price is in the cheap band,
     half rate otherwise; battery charges when cheap, discharges when expensive.
     Uses only observation features (current price vs 4h-ahead mean)."""
     d = env.config.discretization
+    n_ports = env.action_space.shape[-1] - 1  # last head is the battery
 
     def policy(params, key, obs):
         p_now = obs[..., -3]
@@ -41,7 +48,7 @@ def price_threshold_policy(env: ChargaxEnv, low_frac: float = 0.4):
         port_level = jnp.where(cheap, 2 * d, int(1.5 * d))
         batt_level = jnp.where(cheap, 2 * d, 0)
         ports = jnp.broadcast_to(
-            port_level[..., None], obs.shape[:-1] + (env.n_evse,)
+            port_level[..., None], jnp.shape(obs)[:-1] + (n_ports,)
         )
         batt = batt_level[..., None]
         return jnp.concatenate([ports, batt], axis=-1).astype(jnp.int32)
@@ -50,7 +57,7 @@ def price_threshold_policy(env: ChargaxEnv, low_frac: float = 0.4):
 
 
 def v2g_arbitrage_policy(
-    env: ChargaxEnv,
+    env: Environment,
     env_params: EnvParams | None = None,
     hi_quantile: float = 0.75,
     lo_quantile: float = 0.40,
@@ -74,10 +81,11 @@ def v2g_arbitrage_policy(
     q_hi = jnp.quantile(table, hi_quantile)
     q_lo = jnp.quantile(table, lo_quantile)
     d = env.config.discretization
-    n = env.n_evse
+    n = env.action_space.shape[-1] - 1  # EVSE heads (battery is last)
 
     def policy(params, key, obs):
-        port = obs[..., : 8 * n].reshape(obs.shape[:-1] + (n, 8))
+        # observation layout: 8 features per port (see observation_space)
+        port = obs[..., : 8 * n].reshape(jnp.shape(obs)[:-1] + (n, 8))
         # original request served when the remaining energy is all V2G debt
         met = port[..., 3] - port[..., 4] < met_frac
         p_now = obs[..., -3]  # current buy price (observation price feats)

@@ -1,17 +1,20 @@
-"""Policy evaluation harness: vectorised full-episode rollouts with metrics."""
-from __future__ import annotations
+"""Policy evaluation harness: vectorised full-episode rollouts with metrics.
 
-from functools import partial
+Episode batching goes through :class:`repro.envs.VmapWrapper` — the same
+wrapper PPO trains through — so evaluation speaks the ``Environment``
+protocol and needs no hand-rolled vmap axes.
+"""
+from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.env import ChargaxEnv
 from repro.core.state import EnvParams
+from repro.envs import Environment, VmapWrapper
 
 
 def evaluate(
-    env: ChargaxEnv,
+    env: Environment,
     policy,  # (params, key, obs) -> action
     policy_params,
     key: jax.Array,
@@ -35,21 +38,18 @@ def evaluate(
                 f"num_episodes={num_episodes} must equal the stacked "
                 f"parameter count {n_stacked}"
             )
+    venv = VmapWrapper(env, num_episodes, params_axis=params_axis)
 
     @jax.jit
     def run(key):
-        keys = jax.random.split(key, num_episodes)
-        obs, state = jax.vmap(env.reset, in_axes=(0, params_axis))(keys, env_params)
+        obs, state = venv.reset(key, env_params)
 
         def step_fn(carry, _):
             obs, state, key, ep_reward = carry
             key, k_act, k_step = jax.random.split(key, 3)
             action = policy(policy_params, k_act, obs)
-            step_keys = jax.random.split(k_step, num_episodes)
-            obs, state, reward, done, info = jax.vmap(
-                env.step, in_axes=(0, 0, 0, params_axis)
-            )(step_keys, state, action, env_params)
-            return (obs, state, key, ep_reward + reward), None
+            ts = venv.step(k_step, state, action, env_params)
+            return (ts.obs, ts.state, key, ep_reward + ts.reward), None
 
         (obs, state, _, ep_reward), _ = jax.lax.scan(
             step_fn, (obs, state, key, jnp.zeros(num_episodes)), None,

@@ -4,6 +4,13 @@ The whole training run (rollout scan -> GAE -> minibatch epochs) is one jitted
 function; environments are vectorised on-device, matching the paper's setup
 (Lu et al., 2022).  Hyperparameter defaults replicate paper Table 3.
 
+Environment plumbing goes through the ``repro.envs`` protocol: ``make_train``
+wraps the env as ``AutoReset(VmapWrapper(env, num_envs))`` — the wrapper
+stack owns batching, the nested scenario×env layout (one exogenous-table
+copy per scenario) and episode restarts, so this file contains *no*
+env-specific vmap glue and any :class:`repro.envs.Environment` with the
+Chargax action layout trains unchanged.
+
 For pod-scale runs, ``shard_envs`` places the environment batch on the mesh's
 data axes so rollouts parallelise across chips without host transfers
 (DESIGN.md §3) — the same function compiles for 1 CPU device and for the
@@ -17,9 +24,9 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.env import ChargaxEnv
 from repro.core.state import EnvParams
 from repro.distributed import env_sharding
+from repro.envs import AutoReset, Environment, VmapWrapper
 from repro.optim import AdamWConfig, adamw_init, adamw_update, apply_updates, linear_anneal
 from repro.rl import networks
 
@@ -80,25 +87,31 @@ class RunnerState(NamedTuple):
 
 def make_train(
     config: PPOConfig,
-    env: ChargaxEnv,
+    env: Environment,
     env_params: EnvParams | None = None,
     shard_envs: Callable[[jnp.ndarray], jnp.ndarray] | None = None,
     scenario_params: EnvParams | None = None,
 ) -> Callable[[jax.Array], dict]:
     """Build the full jitted training function: key -> {runner_state, metrics}.
 
+    ``env`` is any single-instance :class:`repro.envs.Environment`; batching
+    and episode restarts come from ``AutoReset(VmapWrapper(env, num_envs))``.
+
     ``scenario_params`` — a stacked ``(S, ...)`` parameter pytree (e.g. from
     ``scenarios.stack_params``) — trains one agent across a scenario
     *distribution* for robustness (the paper's distribution-shift setting):
     the ``num_envs`` parallel environments are split into S contiguous blocks
-    of ``num_envs // S`` and stepped under a *nested* vmap (scenario axis
-    outer, envs-per-scenario inner), so every rollout mixes all S worlds and
-    the minibatches interleave them while device memory holds exactly ONE
-    copy of each scenario's exogenous tables (leading axis S, never
-    ``num_envs``).  The returned ``train`` function carries the resolved
-    parameter pytree as ``train.lowered_env_params`` for introspection.
+    of ``num_envs // S`` and stepped under ``VmapWrapper``'s *nested* vmap
+    (scenario axis outer, envs-per-scenario inner), so every rollout mixes
+    all S worlds and the minibatches interleave them while device memory
+    holds exactly ONE copy of each scenario's exogenous tables (leading axis
+    S, never ``num_envs``).  The returned ``train`` function carries the
+    resolved parameter pytree as ``train.lowered_env_params`` for
+    introspection.
     """
-    n_heads, n_actions = env.num_action_heads, env.num_actions_per_head
+    n_heads = env.action_space.shape[-1]
+    n_actions = env.action_space.num_categories
+    obs_dim = env.observation_space.shape[-1]
     constrain = shard_envs or env_sharding.constrain_env_batch
 
     if scenario_params is not None:
@@ -124,42 +137,11 @@ def make_train(
     )
     opt_cfg = AdamWConfig(max_grad_norm=config.max_grad_norm)
 
-    if n_scen is not None:
-        # nested vmap: outer axis S over the stacked scenario tables, inner
-        # axis E = num_envs // S over envs sharing one table copy.  The
-        # (S, E, ...) batch is flattened back to (num_envs, ...) so the rest
-        # of the training loop is layout-agnostic.
-        n_env_per = config.num_envs // n_scen
-
-        def nest(x):
-            return x.reshape((n_scen, n_env_per) + x.shape[1:])
-
-        def flat(x):
-            return x.reshape((config.num_envs,) + x.shape[2:])
-
-        nested_reset = jax.vmap(jax.vmap(env.reset, in_axes=(0, None)), in_axes=(0, 0))
-        nested_step = jax.vmap(
-            jax.vmap(env.step, in_axes=(0, 0, 0, None)), in_axes=(0, 0, 0, 0)
-        )
-
-        def v_reset(keys, params):
-            obs, state = nested_reset(nest(keys), params)
-            return flat(obs), jax.tree_util.tree_map(flat, state)
-
-        def v_step(keys, state, action, params):
-            obs, state, reward, done, info = nested_step(
-                nest(keys), jax.tree_util.tree_map(nest, state), nest(action), params
-            )
-            return (
-                flat(obs),
-                jax.tree_util.tree_map(flat, state),
-                flat(reward),
-                flat(done),
-                jax.tree_util.tree_map(flat, info),
-            )
-    else:
-        v_reset = jax.vmap(env.reset, in_axes=(0, None))
-        v_step = jax.vmap(env.step, in_axes=(0, 0, 0, None))
+    # the wrapper stack owns ALL env batching: a flat (num_envs,) vmap, or
+    # the nested scenario×env layout when scenario_params is given; AutoReset
+    # restarts finished episodes inside step
+    venv = VmapWrapper(env, config.num_envs, num_scenarios=n_scen)
+    wenv = AutoReset(venv)
 
     def policy(params, obs):
         return networks.apply_actor_critic(params, obs, n_heads, n_actions)
@@ -167,41 +149,29 @@ def make_train(
     def train(key: jax.Array) -> dict:
         key, k_net, k_reset = jax.random.split(key, 3)
         params = networks.init_actor_critic(
-            k_net, env.obs_dim, n_heads, n_actions, config.hidden
+            k_net, obs_dim, n_heads, n_actions, config.hidden
         )
         opt_state = adamw_init(params)
-        reset_keys = jax.random.split(k_reset, config.num_envs)
-        obs, env_state = v_reset(reset_keys, env_params)
+        obs, env_state = wenv.reset(k_reset, env_params)
         obs = constrain(obs)
 
         def env_step(runner: RunnerState, _):
             params, opt_state, env_state, obs, key, upd = runner
-            key, k_act, k_step, k_reset = jax.random.split(key, 4)
+            key, k_act, k_env = jax.random.split(key, 3)
             out = policy(params, obs)
             action = networks.sample_action(k_act, out.logits)
             logp = networks.log_prob(out.logits, action)
 
-            step_keys = jax.random.split(k_step, config.num_envs)
-            n_obs, n_state, reward, done, info = v_step(step_keys, env_state, action, env_params)
-
-            # auto-reset finished episodes
-            reset_keys = jax.random.split(k_reset, config.num_envs)
-            r_obs, r_state = v_reset(reset_keys, env_params)
-            n_obs = jnp.where(done[:, None], r_obs, n_obs)
-            n_state = jax.tree_util.tree_map(
-                lambda r, n: jnp.where(
-                    done.reshape(done.shape + (1,) * (n.ndim - 1)), r, n
-                ),
-                r_state,
-                n_state,
-            )
-            n_obs = constrain(n_obs)
+            # step + auto-reset: ts.obs/ts.state restart where done, while
+            # ts.reward/ts.done still describe the finishing transition
+            ts = wenv.step(k_env, env_state, action, env_params)
+            n_obs = constrain(ts.obs)
 
             t = Transition(
-                done, action, out.value, reward * config.reward_scale, logp, obs,
-                {k: info[k] for k in ("profit", "missing_kwh", "rejected")},
+                ts.done, action, out.value, ts.reward * config.reward_scale, logp, obs,
+                {k: ts.info[k] for k in ("profit", "missing_kwh", "rejected")},
             )
-            return RunnerState(params, opt_state, n_state, n_obs, key, upd), t
+            return RunnerState(params, opt_state, ts.state, n_obs, key, upd), t
 
         def compute_gae(traj: Transition, last_val: jnp.ndarray):
             def scan_fn(carry, t):
@@ -302,9 +272,10 @@ def make_train(
     return train
 
 
-def make_ppo_policy(env: ChargaxEnv, greedy: bool = True):
-    """Wrap trained params into an eval policy: (key, obs) -> action."""
-    n_heads, n_actions = env.num_action_heads, env.num_actions_per_head
+def make_ppo_policy(env: Environment, greedy: bool = True):
+    """Wrap trained params into an eval policy: (params, key, obs) -> action."""
+    n_heads = env.action_space.shape[-1]
+    n_actions = env.action_space.num_categories
 
     def policy(params, key, obs):
         out = networks.apply_actor_critic(params, obs, n_heads, n_actions)

@@ -9,7 +9,7 @@
 Every scenario lowers to identically-shaped ``EnvParams`` arrays, so one
 jitted ``env.step`` serves the whole catalog (and any user scenario).
 """
-from repro.core.fleet import stack_params
+from repro.utils import stack_pytrees as stack_params
 from repro.scenarios.registry import (
     CATALOG,
     V2G_MIXED_PACK,

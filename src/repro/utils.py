@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, TypeVar
+from typing import Any, Sequence, TypeVar
 
 import jax
 
@@ -45,6 +45,32 @@ def pytree_dataclass(cls: type[_T] | None = None, *, meta_fields: tuple[str, ...
 def replace(obj: _T, **kwargs: Any) -> _T:
     """dataclasses.replace that reads nicely at call sites."""
     return dataclasses.replace(obj, **kwargs)
+
+
+def stack_pytrees(trees: "Sequence[_T]") -> _T:
+    """Stack same-shape pytrees along a new leading axis.
+
+    The ONE stacking helper shared by fleets (station axis) and the scenario
+    subsystem (scenario axis) — both ``repro.core.fleet.stack_params`` and
+    ``repro.scenarios.stack_params`` are this function.  Structures and
+    per-leaf shapes must match exactly; mismatches name the offending leaf.
+    """
+    import jax.numpy as jnp
+
+    structures = {jax.tree_util.tree_structure(t) for t in trees}
+    if len(structures) != 1:
+        raise ValueError("pytrees have different structures")
+
+    def stack(path, *xs):
+        shapes = {jnp.shape(x) for x in xs}
+        if len(shapes) != 1:
+            raise ValueError(
+                f"cannot stack pytrees: leaf {jax.tree_util.keystr(path)} has "
+                f"per-entry shapes {[jnp.shape(x) for x in xs]}"
+            )
+        return jnp.stack([jnp.asarray(x) for x in xs])
+
+    return jax.tree_util.tree_map_with_path(stack, *trees)
 
 
 # ---------------------------------------------------------------------------

@@ -14,6 +14,12 @@ from repro.core.transition import (
 from repro.utils import replace
 
 
+def _max_action(env):
+    """The max-charge baseline policy's (constant, unbatched) action."""
+    obs = jnp.zeros(env.observation_space.shape)
+    return make_baseline_max_action(env)(None, None, obs)
+
+
 @pytest.fixture(scope="module")
 def env():
     return ChargaxEnv(EnvConfig())
@@ -81,7 +87,7 @@ def test_constraint_scale_noop_when_within_budget():
 def test_empty_ports_draw_nothing(env, params):
     key = jax.random.key(1)
     _, state = env.reset(key)
-    a = make_baseline_max_action(env)
+    a = _max_action(env)
     _, s2, _, _, _ = env.step(key, state, a)
     # no cars at t=0 -> all port currents zero even at max action
     np.testing.assert_allclose(s2.evse_current, 0.0)
@@ -104,7 +110,7 @@ def test_charging_decreases_remaining_energy(env, params):
         tau=state.tau.at[0].set(0.8),
         user_type=state.user_type.at[0].set(0.0),
     )
-    a = make_baseline_max_action(env)
+    a = _max_action(env)
     _, s2, r, _, info = env.step(key, state, a)
     assert s2.e_remain[0] < 30.0
     assert s2.soc[0] > 0.3
@@ -147,7 +153,7 @@ def test_charge_sensitive_car_departs_when_full(env, params):
         tau=state.tau.at[0].set(0.95),
         user_type=state.user_type.at[0].set(1.0),
     )
-    a = make_baseline_max_action(env)
+    a = _max_action(env)
     _, s2, _, _, _ = env.step(key, state, a)
     # car got its 0.5 kWh and left: port free or re-occupied by a new arrival,
     # but its early-finish recorded nothing in overtime
@@ -157,7 +163,7 @@ def test_charge_sensitive_car_departs_when_full(env, params):
 def test_episode_terminates(env):
     key = jax.random.key(5)
     _, state = env.reset(key)
-    a = make_baseline_max_action(env)
+    a = _max_action(env)
     step = jax.jit(env.step)
     done = False
     for i in range(env.config.episode_steps):

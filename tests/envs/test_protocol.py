@@ -1,0 +1,120 @@
+"""Protocol conformance: every registered scenario runs through the wrapper
+stack under ONE jit entry; consumers contain no env-specific vmap plumbing.
+
+This file is the CI protocol-conformance job (``.github/workflows/ci.yml``).
+"""
+import inspect
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import scenarios
+from repro.core import ChargaxEnv, EnvConfig, FleetEnv
+from repro.envs import (
+    AutoReset,
+    Environment,
+    FleetAdapter,
+    LogWrapper,
+    TimeStep,
+    VmapWrapper,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_chargax_env_implements_the_protocol():
+    env = ChargaxEnv(EnvConfig())
+    assert isinstance(env, Environment)
+    ts = env.step(
+        jax.random.key(0),
+        env.reset(jax.random.key(1))[1],
+        env.sample_action(jax.random.key(2)),
+    )
+    assert isinstance(ts, TimeStep)
+    # NamedTuple: typed access AND the historical 5-tuple unpacking
+    obs, state, reward, done, info = ts
+    assert obs is ts.obs and state is ts.state and info is ts.info
+    assert env.unwrapped is env
+
+
+def test_wrappers_preserve_identity_and_spaces():
+    env = ChargaxEnv(EnvConfig())
+    stack = VmapWrapper(LogWrapper(AutoReset(env)), 3)
+    assert isinstance(stack, Environment)
+    assert stack.unwrapped is env
+    assert stack.observation_space.shape == (3,) + env.observation_space.shape
+    assert stack.action_space.shape == (3,) + env.action_space.shape
+    # attribute delegation reaches the innermost env
+    assert stack.config is env.config
+    assert stack.n_evse == env.n_evse
+
+
+def test_catalog_one_jit_entry_through_wrapper_stack():
+    """Acceptance: every registered scenario steps through the FULL wrapper
+    stack (AutoReset -> LogWrapper -> VmapWrapper) with one compilation."""
+    env = ChargaxEnv(EnvConfig())
+    wenv = VmapWrapper(LogWrapper(AutoReset(env)), 2)
+    step = jax.jit(wenv.step)
+    all_params = [scenarios.make(n).make_params(env) for n in scenarios.names()]
+    assert len(all_params) >= 13
+
+    obs, state = wenv.reset(jax.random.key(0), all_params[0])
+    action = wenv.sample_action(jax.random.key(1))
+    ts = step(jax.random.key(2), state, action, all_params[0])
+    n_compiled = step._cache_size()
+    assert n_compiled == 1
+    for p in all_params[1:]:
+        ts = step(jax.random.key(2), state, action, p)
+        assert np.isfinite(float(np.asarray(ts.reward).sum()))
+    assert step._cache_size() == n_compiled  # pure array swaps, no recompile
+
+
+def test_fleet_adapter_conforms():
+    fleet = FleetEnv(["paper_16", "deep_4x4"])
+    adapter = FleetAdapter(fleet)
+    assert isinstance(adapter, Environment)
+    obs, state = adapter.reset(jax.random.key(0))
+    ts = adapter.step(jax.random.key(1), state, adapter.sample_action(jax.random.key(2)))
+    assert isinstance(ts, TimeStep)
+    assert adapter.observation_space.contains(np.asarray(ts.obs))
+
+
+def test_stacking_helper_is_shared():
+    """Satellite: ONE pytree-stacking util consumed by fleets and scenarios."""
+    from repro import utils
+    from repro.core import fleet
+
+    assert scenarios.stack_params is utils.stack_pytrees
+    assert fleet.stack_params is utils.stack_pytrees
+
+
+def test_ppo_contains_no_env_vmap_plumbing():
+    """Acceptance: the hand-rolled nest/flat/v_reset/v_step glue is gone from
+    rl/ppo.py — batching lives in the wrapper stack only."""
+    from repro.rl import ppo
+
+    src = inspect.getsource(ppo)
+    for needle in ("def nest", "def flat", "def v_reset", "def v_step",
+                   "nested_reset", "nested_step", "jax.vmap(env."):
+        assert needle not in src, f"ppo.py still hand-rolls {needle!r}"
+    assert "VmapWrapper" in src and "AutoReset" in src
+
+
+def test_baselines_are_policies_under_the_action_space():
+    """Satellite: every baseline (incl. the historical bare-array max-charge
+    helper) is a policy(params, key, obs) -> action under action_space."""
+    from repro.core import make_baseline_max_action
+    from repro.rl.baselines import BASELINES
+
+    env = ChargaxEnv(EnvConfig())
+    obs, _ = env.reset(jax.random.key(0))
+    factories = dict(BASELINES)
+    factories["core_max_action"] = make_baseline_max_action
+    for name, make in factories.items():
+        pol = make(env)
+        a = pol(None, jax.random.key(1), obs)
+        assert env.action_space.contains(np.asarray(a)), name
+        # batched obs -> batched actions with the space's trailing shape
+        ab = pol(None, jax.random.key(1), jnp.stack([obs] * 4))
+        assert ab.shape == (4,) + env.action_space.shape, name

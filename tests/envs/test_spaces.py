@@ -1,0 +1,79 @@
+"""Typed spaces: shapes, sampling, membership, batching."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ChargaxEnv, EnvConfig
+from repro.envs import spaces
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_box_sample_and_contains():
+    b = spaces.Box(-1.0, 2.0, (3, 2))
+    x = b.sample(jax.random.key(0))
+    assert x.shape == (3, 2) and x.dtype == jnp.float32
+    assert b.contains(np.asarray(x))
+    assert not b.contains(np.full((3, 2), 5.0))
+    assert not b.contains(np.zeros((2, 3)))
+
+
+def test_box_unbounded_axes_sample_finite():
+    b = spaces.Box(-np.inf, np.inf, (4,))
+    x = b.sample(jax.random.key(1))
+    assert np.all(np.isfinite(np.asarray(x)))
+    assert b.contains(np.asarray(x))
+
+
+def test_discrete():
+    d = spaces.Discrete(5)
+    x = d.sample(jax.random.key(2))
+    assert d.contains(np.asarray(x))
+    assert not d.contains(np.asarray(7))
+
+
+def test_multidiscrete_uniform_grid():
+    m = spaces.MultiDiscrete(np.full((6,), 11))
+    assert m.shape == (6,) and m.num_categories == 11
+    x = m.sample(jax.random.key(3))
+    assert m.contains(np.asarray(x))
+    assert not m.contains(np.full((6,), 11))  # out of range
+    assert not m.contains(np.zeros((6,)))  # float dtype rejected
+    # uniform sampling matches the historical randint draws exactly
+    ref = jax.random.randint(jax.random.key(3), (6,), 0, 11)
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(ref))
+
+
+def test_multidiscrete_non_uniform():
+    m = spaces.MultiDiscrete([2, 3, 5])
+    with pytest.raises(ValueError, match="non-uniform"):
+        _ = m.num_categories
+    x = np.asarray(m.sample(jax.random.key(4)))
+    assert m.contains(x)
+
+
+def test_batch_prepends_axis():
+    b = spaces.batch(spaces.Box(0.0, 1.0, (3,)), 4)
+    assert b.shape == (4, 3)
+    m = spaces.batch(spaces.MultiDiscrete(np.full((2,), 7)), 5)
+    assert m.shape == (5, 2) and m.num_categories == 7
+    d = spaces.batch(spaces.Discrete(3), 2)
+    assert d.shape == (2,) and d.num_categories == 3
+
+
+def test_chargax_spaces_describe_the_env():
+    env = ChargaxEnv(EnvConfig())
+    obs, _ = env.reset(jax.random.key(0))
+    assert env.observation_space.shape == obs.shape
+    assert env.observation_space.contains(np.asarray(obs))
+    a = env.sample_action(jax.random.key(1))
+    assert env.action_space.contains(np.asarray(a))
+    # the legacy integer properties are aliases derived from the spaces
+    assert env.obs_dim == env.observation_space.shape[0]
+    assert env.num_action_heads == env.action_space.shape[0] == env.n_evse + 1
+    assert (
+        env.num_actions_per_head
+        == env.action_space.num_categories
+        == 2 * env.config.discretization + 1
+    )

@@ -1,0 +1,329 @@
+"""Wrapper-stack equivalence: every wrapper reproduces the hand-rolled
+pattern it absorbed BIT-FOR-BIT under the same keys.
+
+The references below are verbatim copies of the pre-protocol consumer code:
+PPO's flat vmap, PPO's nested scenario×env vmap (``nest``/``flat``), PPO's
+where(done) auto-reset, and FleetEnv's tuple-returning step.  Both sides are
+jitted with identical structure, so identical jaxprs compile to identical
+programs and the comparison is exact equality, not tolerance.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import scenarios
+from repro.core import ChargaxEnv, EnvConfig, FleetEnv
+from repro.envs import (
+    AutoReset,
+    FleetAdapter,
+    LogWrapper,
+    TimeStep,
+    VmapWrapper,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+ENV = ChargaxEnv(EnvConfig())
+PARAMS = ENV.default_params
+# one-hour episodes so auto-reset boundaries happen inside short rollouts
+SHORT_ENV = ChargaxEnv(EnvConfig(episode_hours=1.0))
+SHORT_PARAMS = SHORT_ENV.default_params
+
+
+def _assert_trees_equal(got, ref, ctx=""):
+    g = jax.tree_util.tree_leaves(got)
+    r = jax.tree_util.tree_leaves(ref)
+    assert len(g) == len(r), ctx
+    for i, (a, b) in enumerate(zip(g, r)):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), f"{ctx}: leaf {i}"
+
+
+# ---------------------------------------------------------------------------
+# VmapWrapper — flat batch
+# ---------------------------------------------------------------------------
+def test_vmap_wrapper_flat_bit_identical():
+    N = 4
+    venv = VmapWrapper(ENV, N)
+    # the hand-rolled path every consumer used to build
+    v_reset = jax.jit(jax.vmap(ENV.reset, in_axes=(0, None)))
+    v_step = jax.jit(jax.vmap(ENV.step, in_axes=(0, 0, 0, None)))
+    w_reset = jax.jit(venv.reset)
+    w_step = jax.jit(venv.step)
+
+    key = jax.random.key(0)
+    obs_w, st_w = w_reset(key, PARAMS)
+    obs_r, st_r = v_reset(jax.random.split(key, N), PARAMS)
+    assert np.array_equal(np.asarray(obs_w), np.asarray(obs_r))
+    _assert_trees_equal(st_w, st_r, "reset state")
+
+    for t in range(20):
+        k = jax.random.key(100 + t)
+        a = venv.sample_action(jax.random.key(200 + t))
+        ts = w_step(k, st_w, a, PARAMS)
+        assert isinstance(ts, TimeStep)
+        ref = v_step(jax.random.split(k, N), st_r, a, PARAMS)
+        _assert_trees_equal(tuple(ts), tuple(ref), f"step {t}")
+        st_w, st_r = ts.state, ref.state
+
+
+def test_vmap_wrapper_params_axis_maps_stacked_params():
+    names = ["shopping_flat", "highway_demand_charge"]
+    stacked = scenarios.stack_params(
+        [scenarios.make(n).make_params(ENV) for n in names]
+    )
+    venv = VmapWrapper(ENV, len(names), params_axis=0)
+    v_reset = jax.jit(jax.vmap(ENV.reset, in_axes=(0, 0)))
+    key = jax.random.key(1)
+    obs_w, st_w = jax.jit(venv.reset)(key, stacked)
+    obs_r, st_r = v_reset(jax.random.split(key, len(names)), stacked)
+    assert np.array_equal(np.asarray(obs_w), np.asarray(obs_r))
+    _assert_trees_equal(st_w, st_r)
+    # the two worlds genuinely differ through the per-episode mapping
+    assert not np.array_equal(np.asarray(obs_w)[0], np.asarray(obs_w)[1])
+
+    with pytest.raises(ValueError, match="needs explicit params"):
+        venv.reset(key)
+
+
+# ---------------------------------------------------------------------------
+# VmapWrapper — nested scenario×env layout (PR 2 semantics)
+# ---------------------------------------------------------------------------
+def _hand_rolled_nested(env, n_scen, num_envs):
+    """Verbatim pre-protocol PPO plumbing (nest/flat/nested vmaps)."""
+    n_env_per = num_envs // n_scen
+
+    def nest(x):
+        return x.reshape((n_scen, n_env_per) + x.shape[1:])
+
+    def flat(x):
+        return x.reshape((num_envs,) + x.shape[2:])
+
+    nested_reset = jax.vmap(jax.vmap(env.reset, in_axes=(0, None)), in_axes=(0, 0))
+    nested_step = jax.vmap(
+        jax.vmap(env.step, in_axes=(0, 0, 0, None)), in_axes=(0, 0, 0, 0)
+    )
+
+    def v_reset(keys, params):
+        obs, state = nested_reset(nest(keys), params)
+        return flat(obs), jax.tree_util.tree_map(flat, state)
+
+    def v_step(keys, state, action, params):
+        obs, state, reward, done, info = nested_step(
+            nest(keys), jax.tree_util.tree_map(nest, state), nest(action), params
+        )
+        return (
+            flat(obs),
+            jax.tree_util.tree_map(flat, state),
+            flat(reward),
+            flat(done),
+            jax.tree_util.tree_map(flat, info),
+        )
+
+    return v_reset, v_step
+
+
+def test_vmap_wrapper_nested_scenario_bit_identical():
+    names = ["shopping_flat", "shopping_pv_tou", "highway_demand_charge"]
+    stacked = scenarios.stack_params(
+        [scenarios.make(n).make_params(ENV) for n in names]
+    )
+    n_scen, num_envs = len(names), 6
+    venv = VmapWrapper(ENV, num_envs, num_scenarios=n_scen)
+    v_reset, v_step = _hand_rolled_nested(ENV, n_scen, num_envs)
+    v_reset, v_step = jax.jit(v_reset), jax.jit(v_step)
+    w_reset, w_step = jax.jit(venv.reset), jax.jit(venv.step)
+
+    key = jax.random.key(2)
+    obs_w, st_w = w_reset(key, stacked)
+    obs_r, st_r = v_reset(jax.random.split(key, num_envs), stacked)
+    assert obs_w.shape == (num_envs, ENV.observation_space.shape[0])
+    assert np.array_equal(np.asarray(obs_w), np.asarray(obs_r))
+    _assert_trees_equal(st_w, st_r, "reset")
+
+    for t in range(12):
+        k = jax.random.key(300 + t)
+        a = venv.sample_action(jax.random.key(400 + t))
+        ts = w_step(k, st_w, a, stacked)
+        ref = v_step(jax.random.split(k, num_envs), st_r, a, stacked)
+        _assert_trees_equal(tuple(ts), tuple(ref), f"step {t}")
+        st_w, st_r = ts.state, ref[1]
+
+    with pytest.raises(ValueError, match="not a multiple"):
+        VmapWrapper(ENV, 4, num_scenarios=3)
+    with pytest.raises(ValueError, match="not both"):
+        VmapWrapper(ENV, 6, params_axis=0, num_scenarios=3)
+
+
+# ---------------------------------------------------------------------------
+# AutoReset — the where(done) restart pattern
+# ---------------------------------------------------------------------------
+def test_autoreset_bit_identical_across_episode_boundary():
+    N = 3
+    env, params = SHORT_ENV, SHORT_PARAMS
+    venv = VmapWrapper(env, N)
+    wenv = AutoReset(venv)
+    v_reset = jax.vmap(env.reset, in_axes=(0, None))
+    v_step = jax.vmap(env.step, in_axes=(0, 0, 0, None))
+
+    def hand_rolled(key, state, action, params):
+        """Verbatim pre-protocol PPO auto-reset: step, reset, select.
+
+        ``params`` stays an argument (not a closure) so both jitted programs
+        see the same constant structure and compile identically.
+        """
+        k_step, k_reset = jax.random.split(key)
+        n_obs, n_state, reward, done, info = v_step(
+            jax.random.split(k_step, N), state, action, params
+        )
+        r_obs, r_state = v_reset(jax.random.split(k_reset, N), params)
+        n_obs = jnp.where(done[:, None], r_obs, n_obs)
+        n_state = jax.tree_util.tree_map(
+            lambda r, n: jnp.where(
+                done.reshape(done.shape + (1,) * (n.ndim - 1)), r, n
+            ),
+            r_state,
+            n_state,
+        )
+        return n_obs, n_state, reward, done, info
+
+    hand_rolled = jax.jit(hand_rolled)
+    w_step = jax.jit(wenv.step)
+
+    key = jax.random.key(3)
+    _, st_w = wenv.reset(key, params)
+    st_r = jax.tree_util.tree_map(lambda x: x, st_w)
+    n_done = 0
+    for t in range(2 * env.config.episode_steps + 3):
+        k = jax.random.key(500 + t)
+        a = venv.sample_action(jax.random.key(600 + t))
+        ts = w_step(k, st_w, a, params)
+        ref = hand_rolled(k, st_r, a, params)
+        _assert_trees_equal(tuple(ts), tuple(ref), f"step {t}")
+        n_done += int(np.asarray(ts.done).sum())
+        # where done, the state really restarted (episode clock back to 0)
+        t_next = np.asarray(ts.state.t)
+        assert np.all((t_next == 0) == np.asarray(ts.done))
+        st_w, st_r = ts.state, ref[1]
+    assert n_done >= 2 * N  # the rollout crossed episode boundaries
+
+
+def test_autoreset_nested_scenario_stack():
+    """AutoReset(VmapWrapper(num_scenarios=S)) — the exact PPO stack."""
+    names = ["shopping_flat", "shopping_pv_tou"]
+    stacked = scenarios.stack_params(
+        [scenarios.make(n).make_params(SHORT_ENV) for n in names]
+    )
+    wenv = AutoReset(VmapWrapper(SHORT_ENV, 4, num_scenarios=2))
+    step = jax.jit(wenv.step)
+    key = jax.random.key(4)
+    _, state = wenv.reset(key, stacked)
+    dones = 0
+    for t in range(SHORT_ENV.config.episode_steps + 2):
+        a = wenv.sample_action(jax.random.key(700 + t))
+        ts = step(jax.random.key(800 + t), state, a, stacked)
+        state = ts.state
+        dones += int(np.asarray(ts.done).sum())
+    assert dones == 4  # every env finished exactly one episode and restarted
+    assert np.all(np.isfinite(np.asarray(ts.reward)))
+
+
+# ---------------------------------------------------------------------------
+# LogWrapper — episode accounting
+# ---------------------------------------------------------------------------
+def test_log_wrapper_reports_episode_totals():
+    env, params = SHORT_ENV, SHORT_PARAMS
+    wenv = LogWrapper(AutoReset(env))
+    step = jax.jit(wenv.step)
+    key = jax.random.key(5)
+    obs, state = wenv.reset(key, params)
+    rewards = []
+    T = env.config.episode_steps
+    for t in range(T + 3):
+        a = env.sample_action(jax.random.key(900 + t))
+        ts = step(jax.random.key(1000 + t), state, a, params)
+        state = ts.state
+        rewards.append(float(ts.reward))
+        if t < T - 1:  # mid-episode: nothing returned yet
+            assert not bool(ts.info["returned_episode"])
+            assert float(ts.info["episode_return"]) == 0.0
+        elif t == T - 1:  # episode end: totals surface in info
+            assert bool(ts.info["returned_episode"])
+            np.testing.assert_allclose(
+                float(ts.info["episode_return"]), sum(rewards), rtol=1e-5
+            )
+            assert int(ts.info["episode_length"]) == T
+            ep_total = float(ts.info["episode_return"])
+        else:  # next episode: returned stats stay frozen
+            assert not bool(ts.info["returned_episode"])
+            assert float(ts.info["episode_return"]) == ep_total
+            assert int(ts.info["episode_length"]) == T
+
+
+# ---------------------------------------------------------------------------
+# FleetAdapter — the protocol view of FleetEnv
+# ---------------------------------------------------------------------------
+def test_fleet_adapter_bit_identical_to_fleet_env():
+    fleet = FleetEnv(["paper_16", "deep_4x4"])
+    adapter = FleetAdapter(fleet)
+    params = fleet.default_params
+    key = jax.random.key(6)
+
+    obs_a, st_a = adapter.reset(key, params)
+    obs_f, st_f = fleet.reset(key, params)
+    assert np.array_equal(np.asarray(obs_a), np.asarray(obs_f))
+    _assert_trees_equal(st_a, st_f)
+
+    a = adapter.sample_action(jax.random.key(7))
+    ts = jax.jit(adapter.step)(jax.random.key(8), st_a, a, params)
+    ref = jax.jit(fleet.step)(jax.random.key(8), st_f, a, params)
+    assert isinstance(ts, TimeStep)
+    _assert_trees_equal(tuple(ts), tuple(ref))
+
+    # typed (S, ...) spaces derived from the template station
+    S = fleet.n_stations
+    assert adapter.observation_space.shape == (S, fleet.template.obs_dim)
+    assert adapter.action_space.shape == (S, fleet.template.num_action_heads)
+    assert adapter.action_space.contains(np.asarray(a))
+    assert adapter.unwrapped is fleet
+
+
+def test_autoreset_composes_over_fleet_adapter():
+    fleet = FleetEnv(["paper_16", "single_dc_8"], EnvConfig(episode_hours=1.0))
+    wenv = AutoReset(FleetAdapter(fleet))
+    params = fleet.default_params
+    _, state = wenv.reset(jax.random.key(9), params)
+    step = jax.jit(wenv.step)
+    T = fleet.config.episode_steps
+    for t in range(T):
+        a = wenv.sample_action(jax.random.key(1100 + t))
+        ts = step(jax.random.key(1200 + t), state, a, params)
+        state = ts.state
+    # the per-station dones fired at the horizon and every station restarted
+    assert np.all(np.asarray(ts.done))
+    assert np.all(np.asarray(ts.state.t) == 0)
+
+
+# ---------------------------------------------------------------------------
+# GymnasiumBridge — optional non-JAX surface
+# ---------------------------------------------------------------------------
+def test_gymnasium_bridge_smoke():
+    gym = pytest.importorskip("gymnasium")
+    from repro.envs import GymnasiumBridge
+
+    env = GymnasiumBridge(SHORT_ENV, seed=0)
+    assert isinstance(env, gym.Env)
+    assert env.observation_space.shape == SHORT_ENV.observation_space.shape
+    obs, info = env.reset(seed=17)
+    assert env.observation_space.contains(obs)
+    truncations = 0
+    for t in range(SHORT_ENV.config.episode_steps):
+        obs, reward, terminated, truncated, info = env.step(
+            env.action_space.sample()
+        )
+        assert env.observation_space.contains(obs)
+        assert isinstance(reward, float) and not terminated
+        truncations += int(truncated)
+    assert truncations == 1  # fixed horizon -> exactly one truncation
+    obs2, _ = env.reset()
+    assert env.observation_space.contains(obs2)

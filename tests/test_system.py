@@ -12,11 +12,11 @@ def test_chargax_full_day_episode():
     key = jax.random.key(0)
     obs, state = env.reset(key)
     step = jax.jit(env.step)
-    action = make_baseline_max_action(env)
+    baseline = make_baseline_max_action(env)  # policy(params, key, obs)
     done = False
     for _ in range(env.config.episode_steps):
         key, k = jax.random.split(key)
-        obs, state, reward, done, info = step(k, state, action)
+        obs, state, reward, done, info = step(k, state, baseline(None, k, obs))
     assert bool(done)
     assert float(state.cars_served) > 20  # a busy day actually happened
     assert float(state.energy_delivered) > 100.0
