@@ -15,6 +15,11 @@ Also records the ``repro.envs`` wrapper-stack overhead: the same random
 rollout through ``VmapWrapper`` vs the raw hand-vmapped step (target: <= 2%
 — the wrapper is trace-time sugar, both paths lower to the same program).
 Persisted to ``BENCH_speed.json`` as ``wrapper_overhead_frac``.
+
+And the real-data row: a ``REAL_PACK`` scenario (ingested ENTSO-E prices +
+PVGIS solar) swapped into the same compiled rollout as the synthetic
+baseline — asserted one jit entry, timed interleaved.  Persisted as
+``real_vs_synthetic_frac`` (table provenance must be perf-neutral).
 """
 from __future__ import annotations
 
@@ -30,13 +35,14 @@ from repro.envs import VmapWrapper
 from repro.rl import PPOConfig, make_train
 
 
-def _make_random_rollout(env, venv, params, n_steps: int, n_envs: int, wrapped: bool):
+def _make_random_rollout(env, venv, n_steps: int, n_envs: int, wrapped: bool):
     """Jitted random rollout: via ``VmapWrapper`` (protocol path) or the
     hand-vmapped ``env.step`` — identical computation, identical compiled
-    program."""
+    program.  ``params`` is a call argument so swapping exogenous tables
+    (synthetic vs real-data scenarios) reuses one compiled program."""
 
     @jax.jit
-    def rollout(key, state):
+    def rollout(key, state, params):
         def body(carry, _):
             key, state = carry
             key, ka, ks = jax.random.split(key, 3)
@@ -66,15 +72,15 @@ def bench_jax_random(
     env = ChargaxEnv(EnvConfig())
     params = env.default_params
     venv = VmapWrapper(env, n_envs)
-    rollout = _make_random_rollout(env, venv, params, n_steps, n_envs, wrapped)
+    rollout = _make_random_rollout(env, venv, n_steps, n_envs, wrapped)
     key = jax.random.key(0)
     _, state = venv.reset(key, params)
-    st, s = rollout(key, state)  # compile
+    st, s = rollout(key, state, params)  # compile
     jax.block_until_ready(s)
     best = float("inf")
     for _ in range(max(repeats, 1)):
         t0 = time.perf_counter()
-        _, s = rollout(key, state)
+        _, s = rollout(key, state, params)
         jax.block_until_ready(s)
         best = min(best, time.perf_counter() - t0)
     return best
@@ -93,23 +99,63 @@ def bench_wrapper_overhead(
     env = ChargaxEnv(EnvConfig())
     params = env.default_params
     venv = VmapWrapper(env, n_envs)
-    raw = _make_random_rollout(env, venv, params, n_steps, n_envs, wrapped=False)
-    wrapped = _make_random_rollout(env, venv, params, n_steps, n_envs, wrapped=True)
+    raw = _make_random_rollout(env, venv, n_steps, n_envs, wrapped=False)
+    wrapped = _make_random_rollout(env, venv, n_steps, n_envs, wrapped=True)
 
     key = jax.random.key(0)
     _, state = venv.reset(key, params)
     for fn in (raw, wrapped):  # compile both before any timing
-        st, s = fn(key, state)
+        st, s = fn(key, state, params)
         jax.block_until_ready(s)
 
     best = {False: float("inf"), True: float("inf")}
     for _ in range(max(rounds, 1)):
         for is_wrapped, fn in ((False, raw), (True, wrapped)):
             t0 = time.perf_counter()
-            _, s = fn(key, state)
+            _, s = fn(key, state, params)
             jax.block_until_ready(s)
             best[is_wrapped] = min(best[is_wrapped], time.perf_counter() - t0)
     return best[False], best[True]
+
+
+def bench_real_vs_synthetic(
+    n_steps: int = 100_000, n_envs: int = 1024, rounds: int = 3,
+) -> tuple[float, float]:
+    """(seconds synthetic, seconds real-data) for the same jitted rollout.
+
+    Proves table provenance is perf-neutral: a real-data scenario
+    (``REAL_PACK``: ENTSO-E prices + PVGIS solar from vendored extracts)
+    swaps into the *same compiled program* as the synthetic baseline —
+    asserted via the jit cache size — and steps at the same rate.
+    Interleaved timing, min per table, as in ``bench_wrapper_overhead``.
+    """
+    from repro import scenarios
+
+    env = ChargaxEnv(EnvConfig())
+    venv = VmapWrapper(env, n_envs)
+    p_synth = scenarios.make("shopping_pv_tou").make_params(env)
+    p_real = scenarios.make("real_nl_2024_office").make_params(env)
+    rollout = _make_random_rollout(env, venv, n_steps, n_envs, wrapped=True)
+
+    key = jax.random.key(0)
+    _, state = venv.reset(key, p_synth)
+    for p in (p_synth, p_real):
+        _, s = rollout(key, state, p)
+        jax.block_until_ready(s)
+    if rollout._cache_size() != 1:
+        raise AssertionError(
+            "real-data params recompiled the rollout "
+            f"({rollout._cache_size()} jit entries)"
+        )
+
+    best = {"synth": float("inf"), "real": float("inf")}
+    for _ in range(max(rounds, 1)):
+        for label, p in (("synth", p_synth), ("real", p_real)):
+            t0 = time.perf_counter()
+            _, s = rollout(key, state, p)
+            jax.block_until_ready(s)
+            best[label] = min(best[label], time.perf_counter() - t0)
+    return best["synth"], best["real"]
 
 
 def bench_python_random(n_steps: int = 20_000) -> float:
@@ -245,6 +291,19 @@ def run(quick: bool = True) -> list[tuple[str, float, str]]:
     rows.append(("random_python_ref", us_py, f"{n_py/t_py:,.0f} steps/s"))
     rows.append(("random_speedup", us_py / us_jax, "x faster (paper: 27x-1144x)"))
 
+    # real-data scenarios (ENTSO-E + PVGIS tables) vs synthetic: same jit
+    # entry, same speed — provenance of the exogenous tables is perf-neutral
+    t_synth, t_real = bench_real_vs_synthetic(n_jax, rounds=3)
+    real_frac = t_real / t_synth - 1.0
+    rows.append(
+        (
+            "random_chargax_real_data",
+            t_real / n_jax * 1e6,
+            f"{n_jax/t_real:,.0f} steps/s real-vs-synthetic "
+            f"{real_frac:+.2%} (one jit entry)",
+        )
+    )
+
     n_ppo = 50_000 if quick else 100_000
     t_ppo16 = bench_jax_ppo(n_ppo, 16)
     t_ppo1 = bench_jax_ppo(25_000 if quick else 100_000, 1)
@@ -263,6 +322,8 @@ def run(quick: bool = True) -> list[tuple[str, float, str]]:
         "random_env_steps_per_sec": round(n_jax / t_jax, 1),
         "wrapped_env_steps_per_sec": round(n_jax / t_wrapped, 1),
         "wrapper_overhead_frac": round(overhead, 4),
+        "real_data_env_steps_per_sec": round(n_jax / t_real, 1),
+        "real_vs_synthetic_frac": round(real_frac, 4),
         "python_ref_steps_per_sec": round(n_py / t_py, 1),
     }
     return rows

@@ -1,0 +1,101 @@
+"""Real-data scenarios end to end: ingest ENTSO-E prices + PVGIS solar,
+inspect the canonical tables, lower the REAL_PACK next to the synthetic
+catalog under ONE compiled step, and roll a real-data day.
+
+    PYTHONPATH=src python examples/real_data.py
+
+Everything runs offline from the vendored sample extracts (~75 KB under
+``src/repro/data/ingest/fixtures/``); ``docs/data_provenance.md`` documents
+their schemas and how to fetch full datasets yourself.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import scenarios
+from repro.core import ChargaxEnv, EnvConfig
+from repro.data import ingest
+
+
+def main():
+    env = ChargaxEnv(EnvConfig())
+    dtm = env.config.dt_minutes
+
+    # --- 1. the ingested tables themselves ----------------------------------
+    print("registered real-data sources:")
+    for name, src in ingest.SOURCES.items():
+        print(f"  {name:18s} [{src.kind:6s}] {src.description}")
+
+    prices = ingest.load_price_table("nl_2024", dtm)  # (365, spd) EUR/kWh
+    neg_hours = float((prices < 0).mean()) * 365 * 24
+    print(
+        f"\nNL 2024 day-ahead: mean {prices.mean():.3f} EUR/kWh, "
+        f"min {prices.min():.3f}, max {prices.max():.3f}, "
+        f"~{neg_hours:.0f} negative hours/year"
+    )
+    for site in ("pvgis_nl_delft", "pvgis_es_seville"):
+        shape = ingest.load_pv_table(site, dtm)  # peak-normalised
+        cap_factor = float(shape.mean())
+        print(f"{site}: capacity factor {cap_factor:.2%} of peak")
+
+    # --- 2. REAL_PACK + the full synthetic catalog: one jit entry -----------
+    all_names = scenarios.names()
+    params = [scenarios.make(n).make_params(env) for n in all_names]
+    step = jax.jit(env.step)
+    _, state = env.reset(jax.random.key(0), params[0])
+    action = env.sample_action(jax.random.key(1))
+    step(jax.random.key(2), state, action, params[0])
+    n_entries = step._cache_size()
+    for p in params[1:]:
+        step(jax.random.key(2), state, action, p)
+    assert step._cache_size() == n_entries, "a scenario recompiled the step!"
+    print(
+        f"\n{len(all_names)} scenarios ({len(scenarios.REAL_PACK)} real-data) "
+        f"stepped through {n_entries} compiled program(s)"
+    )
+
+    # --- 3. a 24h rollout on a real-data world ------------------------------
+    sc = scenarios.make("real_es_solar_heavy")
+    p = sc.make_params(env)
+
+    @jax.jit
+    def rollout(key, p):
+        _, state = env.reset(key, p)
+
+        def body(carry, _):
+            key, state = carry
+            key, ka, ks = jax.random.split(key, 3)
+            _, state, r, _, info = env.step(ks, state, env.sample_action(ka), p)
+            return (key, state), (r, info["e_pv"])
+
+        (_, state), (rs, e_pv) = jax.lax.scan(
+            body, (key, state), None, env.config.episode_steps
+        )
+        return state, rs, e_pv
+
+    state, rs, e_pv = rollout(jax.random.key(3), p)
+    print(
+        f"{sc.name}: {int(state.cars_served)} cars served, "
+        f"profit EUR {float(state.profit_cum):.2f}, "
+        f"PV {float(e_pv.sum()):.1f} kWh (real Seville shape @ "
+        f"{sc.pv_peak_kw:.0f} kW)"
+    )
+
+    # --- 4. PPO across the real-data distribution ---------------------------
+    from repro.rl import PPOConfig, make_train
+
+    stacked = scenarios.stack_params(
+        [scenarios.make(n).make_params(env) for n in scenarios.REAL_PACK]
+    )
+    cfg = PPOConfig(
+        total_timesteps=40_000, num_envs=len(scenarios.REAL_PACK) * 2,
+        rollout_steps=100, hidden=(64, 64),
+    )
+    print(f"\ntraining PPO over REAL_PACK ({', '.join(scenarios.REAL_PACK)}) ...")
+    out = jax.jit(make_train(cfg, env, scenario_params=stacked))(jax.random.key(4))
+    rr = out["metrics"]["rollout_reward"]
+    print(f"rollout reward: {float(rr[0]):.0f} -> {float(rr[-1]):.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Data layer: synthetic pipelines + real-data ingest.
+
+* :mod:`repro.data.pipeline` — deterministic synthetic LM token streams
+  (counter-based, checkpoint-free).
+* :mod:`repro.data.ingest` — offline loaders for real exogenous series
+  (ENTSO-E day-ahead prices, PVGIS hourly solar) feeding the scenario DSL.
+"""

@@ -79,6 +79,26 @@ def run_dryrun(args) -> dict:
     return results
 
 
+def _expand_scenarios(spec: str) -> list[str]:
+    """Expand ``--scenarios`` tokens: names pass through, pack names
+    (``REAL_PACK``, ``V2G_PACK``, ``V2G_MIXED_PACK``, ``CATALOG``) expand to
+    their members — so ``--scenarios REAL_PACK,shopping_flat`` trains across
+    the real-data worlds plus the synthetic baseline in one distribution."""
+    from repro import scenarios as _scen
+
+    packs = {
+        "REAL_PACK": _scen.REAL_PACK,
+        "V2G_PACK": _scen.V2G_PACK,
+        "V2G_MIXED_PACK": _scen.V2G_MIXED_PACK,
+        "CATALOG": tuple(s.name for s in _scen.CATALOG),
+    }
+    names: list[str] = []
+    for tok in spec.split(","):
+        tok = tok.strip()
+        names.extend(packs.get(tok, (tok,)))
+    return names
+
+
 def run_train(args):
     env = ChargaxEnv(
         EnvConfig(scenario=args.scenario, traffic=args.traffic, allow_v2g=args.v2g)
@@ -90,7 +110,7 @@ def run_train(args):
         num_envs=args.num_envs,
         rollout_steps=args.rollout,
     )
-    scenario_names = args.scenarios.split(",") if args.scenarios else None
+    scenario_names = _expand_scenarios(args.scenarios) if args.scenarios else None
     if args.v2g and scenario_names is None:
         # default --v2g distribution: V2G-heavy worlds mixed with their
         # charge-only counterparts (per-port v2g masks are plain arrays, so
@@ -184,7 +204,8 @@ def main(argv=None):
         "--scenarios",
         default=None,
         help="comma-separated catalog scenarios to train across "
-        "(nested-vmap distribution training; num-envs must be a multiple)",
+        "(nested-vmap distribution training; num-envs must be a multiple); "
+        "pack names REAL_PACK / V2G_PACK / V2G_MIXED_PACK / CATALOG expand",
     )
     ap.add_argument("--scenario", default="shopping")
     ap.add_argument("--traffic", default="medium")

@@ -12,6 +12,7 @@ jitted ``env.step`` serves the whole catalog (and any user scenario).
 from repro.utils import stack_pytrees as stack_params
 from repro.scenarios.registry import (
     CATALOG,
+    REAL_PACK,
     V2G_MIXED_PACK,
     V2G_PACK,
     make,
@@ -24,6 +25,7 @@ from repro.scenarios import processes
 __all__ = [
     "CATALOG",
     "MAX_CAR_MODELS",
+    "REAL_PACK",
     "Scenario",
     "V2G_MIXED_PACK",
     "V2G_PACK",

@@ -4,7 +4,19 @@ Each function returns a plain numpy table shaped to slot into an existing
 :class:`~repro.core.state.EnvParams` field, so composing a scenario is a pure
 array swap — same shapes, same jit cache entry, no recompilation.  All series
 are deterministic in their inputs (seeded generators), mirroring the bundled
-datasets in :mod:`repro.core.datasets`.
+datasets in :mod:`repro.core.datasets`.  The real-data loaders in
+:mod:`repro.data.ingest` emit identically shaped tables, so every generator
+here is swappable for a measured series.
+
+Doctest-checked (CI runs ``--doctest-modules`` on this file):
+
+    >>> pv_table(0.0, dt_minutes=60.0).shape       # dark plant, hourly grid
+    (365, 24)
+    >>> import numpy as np
+    >>> flat = np.full((365, 24), 0.10, np.float32)
+    >>> tou = tou_overlay(flat, dt_minutes=60.0)
+    >>> float(tou[0, 19]) > 0.10 > float(tou[0, 3])  # evening peak, night dip
+    True
 """
 from __future__ import annotations
 
@@ -19,7 +31,6 @@ from repro.utils import steps_per_day
 # ---------------------------------------------------------------------------
 # Solar PV generation, shape (365, steps_per_day), kW
 # ---------------------------------------------------------------------------
-@functools.lru_cache(maxsize=None)
 def pv_table(
     peak_kw: float,
     dt_minutes: float = 5.0,
@@ -32,7 +43,25 @@ def pv_table(
     cycle (solstices at days 172/355 for a mid-European latitude), intra-day
     output is the half-sine of solar elevation between sunrise and sunset,
     and an AR(1) daily cloudiness factor adds weather persistence.
+
+        >>> pv = pv_table(150.0, dt_minutes=60.0)
+        >>> float(pv[:, 0].max())              # never any sun at midnight
+        0.0
+        >>> bool(pv[172, 12] > pv[355, 12])    # summer noon beats winter noon
+        True
+
+    Results are cached; arguments are normalised to builtin ``float``/``int``
+    first so ``np.float32(150)`` and ``150.0`` callers share one entry.
     """
+    return _pv_table_cached(
+        float(peak_kw), float(dt_minutes), float(cloud_noise), int(seed)
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _pv_table_cached(
+    peak_kw: float, dt_minutes: float, cloud_noise: float, seed: int
+) -> np.ndarray:
     spd = steps_per_day(dt_minutes)
     if peak_kw <= 0.0:
         return np.zeros((DAYS_PER_YEAR, spd), dtype=np.float32)
@@ -48,12 +77,14 @@ def pv_table(
     frac = (h[None, :] - sunrise[:, None]) / daylight[:, None]
     irr = np.sin(np.pi * np.clip(frac, 0.0, 1.0))
 
+    # AR(1) cloudiness c_d = 0.7 c_{d-1} + 0.3 x_d, closed form via cumprod:
+    # c_d = phi^d c_0 + 0.3 phi^d * sum_k x_k phi^-k (decay stays >= 0.7^365
+    # ~ 1e-57, comfortably inside float64, and the rescaled sum is dominated
+    # by its latest terms so precision survives the round trip)
     rng = np.random.default_rng(seed)
-    cloud = np.empty(DAYS_PER_YEAR)
-    c = 0.8
-    for d in range(DAYS_PER_YEAR):
-        c = 0.7 * c + 0.3 * (1.0 - cloud_noise * rng.gamma(1.2, 1.0))
-        cloud[d] = np.clip(c, 0.15, 1.0)
+    x = 1.0 - cloud_noise * rng.gamma(1.2, 1.0, DAYS_PER_YEAR)
+    decay = np.cumprod(np.full(DAYS_PER_YEAR, 0.7))
+    cloud = np.clip(decay * (0.8 + 0.3 * np.cumsum(x / decay)), 0.15, 1.0)
 
     table = peak_kw * peak_factor[:, None] * cloud[:, None] * irr
     return np.maximum(table, 0.0).astype(np.float32)

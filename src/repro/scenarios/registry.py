@@ -160,6 +160,49 @@ CATALOG = tuple(
             v2g_comp_price=0.20,
             v2g_port_fraction=0.25,
         ),
+        # ----- real-data pack (repro.data.ingest) -----
+        # NOTE: runs offline from the vendored sample extracts, which are
+        # format-faithful *synthetic stand-ins* for the real exports (see
+        # docs/data_provenance.md); point price_source/pv_source at your
+        # own ENTSO-E/PVGIS downloads for measured data.
+        Scenario(
+            name="real_nl_2024_office",
+            description="Workplace on NL-2024 day-ahead prices (vendored "
+            "ENTSO-E-format extract) with a PVGIS-format Delft carport; "
+            "weekends go quiet",
+            profile="work",
+            price_source="nl_2024",
+            pv_source="pvgis_nl_delft",
+            pv_peak_kw=120.0,
+            weekend_factor=0.3,
+        ),
+        Scenario(
+            name="real_nl_2024_shopping_tou",
+            description="Shopping centre: ingested NL-2024 prices under a "
+            "retail ToU overlay (negative midday hours make the valley real)",
+            price_source="nl_2024",
+            tariff="tou",
+        ),
+        Scenario(
+            name="real_es_solar_heavy",
+            description="Solar-heavy southern site: PVGIS-format Seville "
+            "shape at 300 kW on ingested NL-2024 prices, summer arrival surge",
+            price_source="nl_2024",
+            pv_source="pvgis_es_seville",
+            pv_peak_kw=300.0,
+            season="summer_peak",
+            weekend_factor=1.2,
+        ),
+        Scenario(
+            name="real_nl_2024_residential_drift",
+            description="Residential street on ingested NL-2024 prices with "
+            "the EU mix drifting to bigger batteries",
+            profile="residential",
+            price_source="nl_2024",
+            season="winter_peak",
+            fleet_drift="big_battery_growth",
+            fleet_drift_strength=1.5,
+        ),
     ]
 )
 
@@ -180,4 +223,17 @@ V2G_MIXED_PACK = (
     "shopping_pv_tou",
     "residential_winter_crisis",
     "shopping_flat",
+)
+
+# Scenarios exercising the real-data ingest path (ENTSO-E day-ahead price
+# and PVGIS hourly solar formats; the vendored extracts are synthetic
+# stand-ins with real-export schemas — docs/data_provenance.md documents
+# this and how to swap in measured downloads).  Same shapes as the
+# synthetic worlds: mixing real-data and synthetic scenarios in one
+# training distribution costs zero recompilation.
+REAL_PACK = (
+    "real_nl_2024_office",
+    "real_nl_2024_shopping_tou",
+    "real_es_solar_heavy",
+    "real_nl_2024_residential_drift",
 )

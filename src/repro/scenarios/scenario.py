@@ -46,6 +46,16 @@ class Scenario:
     price_region: str = "NL"  # NL|FR|DE
     price_year: int = 2021
     car_region: str = "EU"  # EU|US|World
+    # --- real-data axis (repro.data.ingest; overrides the synthetic tables
+    # with identically shaped ones, so the catalog still compiles once) ---
+    # ENTSO-E day-ahead prices: registry name ("nl_2024") or export path;
+    # replaces the synthetic price_region/price_year curve (tariff overlays
+    # still apply on top)
+    price_source: str | None = None
+    # PVGIS hourly solar: registry name ("pvgis_nl_delft") or seriescalc
+    # path; replaces the clear-sky generator's *shape*, still scaled by
+    # pv_peak_kw (set it > 0 or the plant stays dark)
+    pv_source: str | None = None
     # --- solar PV plant ---
     pv_peak_kw: float = 0.0
     pv_cloud_noise: float = 0.15
@@ -119,8 +129,14 @@ class Scenario:
                 ),
             )
 
-        # tariff overlay on the day-ahead curve
-        prices = np.asarray(base.price_buy_table)
+        # day-ahead curve: real ENTSO-E export or the synthetic region/year
+        # profile already in base; tariff overlays apply to either
+        if self.price_source is not None:
+            from repro.data import ingest
+
+            prices = ingest.load_price_table(self.price_source, cfg.dt_minutes)
+        else:
+            prices = np.asarray(base.price_buy_table)
         if self.tariff == "tou":
             prices = processes.tou_overlay(
                 prices,
@@ -131,9 +147,17 @@ class Scenario:
         elif self.tariff != "flat":
             raise ValueError(f"unknown tariff {self.tariff!r}")
 
-        pv = processes.pv_table(
-            self.pv_peak_kw, cfg.dt_minutes, self.pv_cloud_noise, self.pv_seed
-        )
+        if self.pv_source is not None:
+            from repro.data import ingest
+
+            pv = (
+                float(self.pv_peak_kw)
+                * ingest.load_pv_table(self.pv_source, cfg.dt_minutes)
+            ).astype(np.float32)
+        else:
+            pv = processes.pv_table(
+                self.pv_peak_kw, cfg.dt_minutes, self.pv_cloud_noise, self.pv_seed
+            )
         day_scale = processes.seasonal_arrival_scale(
             self.season, self.season_amplitude, self.weekend_factor
         )

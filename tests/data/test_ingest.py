@@ -1,0 +1,265 @@
+"""Real-data ingest tests: golden-file parses of the vendored extracts,
+resampling/DST/gap invariants, format coverage (CSV+XML, CSV+JSON), and the
+fixture-size budget.  Everything runs offline."""
+import datetime as dt
+import collections
+
+import numpy as np
+import pytest
+
+from repro.data import ingest
+from repro.data.ingest import entsoe, pvgis, resample
+
+SPD = {5.0: 288, 15.0: 96, 60.0: 24}
+
+
+# ---------------------------------------------------------------------------
+# Golden-file parses of the vendored extracts
+# ---------------------------------------------------------------------------
+def test_entsoe_fixture_parses_to_canonical_table():
+    table = ingest.load_price_table("nl_2024", 60.0)
+    assert table.shape == (365, 24) and table.dtype == np.float32
+    # EUR/kWh plausibility: NL 2024 averaged ~77 EUR/MWh day-ahead
+    assert 0.05 < float(table.mean()) < 0.15
+    assert float(table.max()) < 1.0  # even spikes stay below 1 EUR/kWh
+    # 2024 had negative midday hours; the extract (and parse) keeps them
+    assert float(table.min()) < 0.0
+    # evening peak exceeds the midday solar depression on average
+    assert table[:, 19].mean() > table[:, 13].mean()
+
+
+def test_pvgis_fixtures_parse_to_normalised_shapes():
+    for name in ("pvgis_nl_delft", "pvgis_es_seville"):
+        shape = ingest.load_pv_table(name, 60.0)
+        assert shape.shape == (365, 24) and shape.dtype == np.float32
+        assert float(shape.max()) == pytest.approx(1.0)
+        assert float(shape.min()) == 0.0
+        assert np.all(shape[:, 0] == 0.0)  # local midnight is dark all year
+    delft = ingest.load_pv_table("pvgis_nl_delft", 60.0)
+    seville = ingest.load_pv_table("pvgis_es_seville", 60.0)
+    # southern site: higher capacity factor, longer winter days
+    assert seville.mean() > delft.mean()
+    winter = slice(0, 60)
+    assert (seville[winter] > 0).sum() > (delft[winter] > 0).sum()
+
+
+def test_loaders_return_copies_and_cache():
+    a = ingest.load_price_table("nl_2024", 60.0)
+    a[:] = 0.0
+    b = ingest.load_price_table("nl_2024", 60.0)
+    assert float(b.mean()) > 0.0  # cache entry not clobbered by the caller
+
+
+def test_unknown_source_raises_with_listing():
+    with pytest.raises(KeyError, match="nl_2024"):
+        ingest.load_price_table("nope_no_such_source")
+    with pytest.raises(ValueError, match="pvgis"):
+        ingest.load_pv_table("nl_2024")  # wrong kind, helpful error
+
+
+# ---------------------------------------------------------------------------
+# DST-transition days
+# ---------------------------------------------------------------------------
+def test_dst_days_regularise_to_steps_per_day():
+    text = ingest.read_text(ingest.SOURCES["nl_2024"].path)
+    recs = entsoe.parse_csv(text)
+    counts = collections.Counter(d for d, _, _ in recs)
+    assert counts[dt.date(2024, 3, 31)] == 23  # spring forward: hour missing
+    assert counts[dt.date(2024, 10, 27)] == 25  # fall back: hour duplicated
+    for dtm, spd in SPD.items():
+        table = ingest.load_price_table("nl_2024", dtm)
+        assert table.shape == (365, spd)
+        assert np.isfinite(table).all()
+
+
+def test_fall_back_duplicate_hour_is_averaged():
+    rows = [(dt.date(2024, 10, 27), h, 10.0) for h in range(24)]
+    rows.append((dt.date(2024, 10, 27), 2, 30.0))  # second 02:00-03:00
+    hourly = resample.canonical_year(rows)
+    assert hourly[0, 2] == pytest.approx(20.0)  # time-weighted mean
+    assert hourly[0, 3] == pytest.approx(10.0)
+
+
+def test_spring_forward_hole_is_interpolated():
+    rows = [
+        (dt.date(2024, 3, 31), h, float(h)) for h in range(24) if h != 2
+    ]
+    hourly = resample.canonical_year(rows)
+    assert hourly[0, 2] == pytest.approx(2.0)  # between hours 1 and 3
+
+
+# ---------------------------------------------------------------------------
+# Gap interpolation + leap/partial years
+# ---------------------------------------------------------------------------
+def test_gap_interpolation_inline_csv():
+    csv = "\n".join(
+        [
+            '"MTU (CET/CEST)","Day-ahead Price [EUR/MWh]","Currency","BZN|NL"',
+            '"01.01.2024 00:00 - 01.01.2024 01:00","100.00","EUR","NL"',
+            '"01.01.2024 01:00 - 01.01.2024 02:00","N/A","EUR","NL"',
+            '"01.01.2024 02:00 - 01.01.2024 03:00","N/A","EUR","NL"',
+            '"01.01.2024 03:00 - 01.01.2024 04:00","400.00","EUR","NL"',
+        ]
+    )
+    table = entsoe.price_table(csv, dt_minutes=60.0)
+    np.testing.assert_allclose(table[0, :4], [0.1, 0.2, 0.3, 0.4], rtol=1e-5)
+
+
+def test_missing_whole_day_keeps_calendar_alignment():
+    """A day the platform never published must become an interpolated NaN
+    row, not silently shift every later day one index earlier."""
+    rows = []
+    for i, val in [(0, 1.0), (2, 5.0)]:  # Jan 2 entirely absent
+        d = dt.date(2024, 1, 1) + dt.timedelta(days=i)
+        rows += [(d, h, val) for h in range(24)]
+    hourly = resample.canonical_year(rows)
+    np.testing.assert_allclose(hourly[0], 1.0)
+    np.testing.assert_allclose(hourly[2], 5.0)  # Jan 3 stays at index 2
+    # the missing Jan 2 interpolates between its neighbours
+    assert 1.0 < hourly[1].mean() < 5.0
+
+
+def test_leap_day_dropped_and_partial_year_tiled():
+    # leap year: Feb 29 present in the fixture, absent from the table
+    text = ingest.read_text(ingest.SOURCES["nl_2024"].path)
+    recs = entsoe.parse_csv(text)
+    assert any(d == dt.date(2024, 2, 29) for d, _, _ in recs)
+    assert ingest.load_price_table("nl_2024", 60.0).shape[0] == 365
+    # partial extract: two days tile periodically to a full year
+    rows = [(dt.date(2024, 1, 1), h, 1.0) for h in range(24)]
+    rows += [(dt.date(2024, 1, 2), h, 3.0) for h in range(24)]
+    hourly = resample.canonical_year(rows)
+    assert hourly.shape == (365, 24)
+    np.testing.assert_allclose(hourly[::2], 1.0)
+    np.testing.assert_allclose(hourly[1::2], 3.0)
+
+
+# ---------------------------------------------------------------------------
+# Energy-conserving resampling
+# ---------------------------------------------------------------------------
+def test_resampling_conserves_daily_totals_across_grids():
+    for source, loader in [
+        ("nl_2024", ingest.load_price_table),
+        ("pvgis_nl_delft", ingest.load_pv_table),
+        ("pvgis_es_seville", ingest.load_pv_table),
+    ]:
+        daily = {}
+        for dtm, spd in SPD.items():
+            table = loader(source, dtm)
+            assert table.shape == (365, spd)
+            daily[dtm] = table.mean(axis=1)  # mean * 24h = daily total
+        np.testing.assert_allclose(daily[5.0], daily[60.0], rtol=1e-5)
+        np.testing.assert_allclose(daily[15.0], daily[60.0], rtol=1e-5)
+
+
+def test_regrid_splits_straddling_hours_proportionally():
+    hourly = np.zeros((1, 24))
+    # 16 steps/day = 90-minute steps: hour 13 (= [13h, 14h)) straddles the
+    # steps [12h, 13.5h) and [13.5h, 15h)
+    hourly[0, 13] = 6.0
+    out = resample.regrid_table(hourly, 16)
+    assert out.shape == (1, 16)
+    np.testing.assert_allclose(out.sum() * (24 / 16), 6.0, rtol=1e-12)
+    assert (out > 0).sum() == 2
+
+
+# ---------------------------------------------------------------------------
+# Format coverage: ENTSO-E XML, PVGIS JSON/CSV equivalence
+# ---------------------------------------------------------------------------
+def test_entsoe_xml_matches_csv():
+    ns = 'xmlns="urn:iec62325.351:tc57wg16:451-3:publicationdocument:7:0"'
+    points = "".join(
+        f"<Point><position>{i+1}</position><price.amount>{(i+1)*10}.0"
+        "</price.amount></Point>"
+        for i in range(24)
+    )
+    xml = (
+        f'<?xml version="1.0"?><Publication_MarketDocument {ns}><TimeSeries>'
+        "<Period><timeInterval><start>2024-06-01T22:00Z</start>"
+        "<end>2024-06-02T22:00Z</end></timeInterval>"
+        f"<resolution>PT60M</resolution>{points}</Period>"
+        "</TimeSeries></Publication_MarketDocument>"
+    )
+    recs = entsoe.parse_xml(xml)
+    assert len(recs) == 24
+    # prices follow the civil clock: UTC 22:00 + CET(+1) + EU summer hour
+    # -> local midnight, i.e. the delivery day starts exactly at 00:00 CEST
+    # (which is why summer API periods start at 22:00Z in the first place)
+    assert recs[0] == (dt.date(2024, 6, 2), 0, pytest.approx(0.010))
+    assert recs[-1] == (dt.date(2024, 6, 2), 23, pytest.approx(0.240))
+    # winter stamps get the bare standard-time offset
+    winter = entsoe.parse_xml(xml.replace("-06-", "-01-"))
+    assert winter[0] == (dt.date(2024, 1, 1), 23, pytest.approx(0.010))
+    # price_table dispatches on leading '<'
+    table = entsoe.price_table(xml, dt_minutes=60.0)
+    assert table.shape == (365, 24)
+
+
+def test_entsoe_xml_curve_a03_forward_fills_positions():
+    xml = (
+        "<doc><Period><timeInterval><start>2024-06-01T00:00Z</start></timeInterval>"
+        "<resolution>PT60M</resolution>"
+        "<Point><position>1</position><price.amount>50.0</price.amount></Point>"
+        "<Point><position>4</position><price.amount>80.0</price.amount></Point>"
+        "</Period></doc>"
+    )
+    recs = entsoe.parse_xml(xml, tz_offset_hours=0)
+    assert [round(v * 1000) for _, _, v in recs] == [50, 50, 50, 80]
+
+
+def test_entsoe_xml_a03_trailing_omission_fills_to_period_end():
+    """Trailing positions omitted under A03 repeat the last value to the
+    declared timeInterval end instead of truncating the day."""
+    xml = (
+        "<doc><Period><timeInterval><start>2024-06-01T00:00Z</start>"
+        "<end>2024-06-02T00:00Z</end></timeInterval>"
+        "<resolution>PT60M</resolution>"
+        "<Point><position>1</position><price.amount>50.0</price.amount></Point>"
+        "<Point><position>20</position><price.amount>90.0</price.amount></Point>"
+        "</Period></doc>"
+    )
+    recs = entsoe.parse_xml(xml, tz_offset_hours=0)
+    assert len(recs) == 24  # hours 21-24 forward-filled from position 20
+    assert [round(v * 1000) for _, _, v in recs[19:]] == [90, 90, 90, 90, 90]
+
+
+def test_tz_offset_override_shifts_pv_clock():
+    src = ingest.SOURCES["pvgis_es_seville"].path
+    east = ingest.load_pv_table(src, 60.0, tz_offset_hours=1)
+    west = ingest.load_pv_table(src, 60.0, tz_offset_hours=-7)
+    assert not np.array_equal(east, west)
+    # a US-mountain offset pushes solar noon 8 hours earlier on the local
+    # clock relative to the CET default
+    noon_east = int(east.mean(axis=0).argmax())
+    noon_west = int(west.mean(axis=0).argmax())
+    assert (noon_east - noon_west) % 24 == 8
+
+
+def test_pvgis_json_and_csv_parse_identically():
+    rows = [("20230701:0011", 0.0), ("20230701:1211, extra", None)]
+    csv = "\n".join(
+        [
+            "Latitude (decimal degrees):\t52.0",
+            "",
+            "time,P,G(i),T2m",
+            "20230701:0011,0.0,0.0,15.2",
+            "20230701:1211,4321.0,880.0,22.4",
+            "",
+            "P: PV system power (W)",
+        ]
+    )
+    json_text = (
+        '{"inputs":{},"outputs":{"hourly":['
+        '{"time":"20230701:0011","P":0.0,"G(i)":0.0},'
+        '{"time":"20230701:1211","P":4321.0,"G(i)":880.0}]},"meta":{}}'
+    )
+    assert pvgis.parse_csv(csv) == pvgis.parse_json(json_text)
+    assert pvgis.parse_csv(csv)[1] == (dt.date(2023, 7, 1), 12, 4321.0)
+
+
+# ---------------------------------------------------------------------------
+# Fixture budget: vendored extracts must stay tiny (CI guards this too)
+# ---------------------------------------------------------------------------
+def test_vendored_fixtures_within_100kb_budget():
+    total = ingest.check_fixture_budget()  # raises if over FIXTURE_BUDGET_BYTES
+    assert 0 < total <= ingest.FIXTURE_BUDGET_BYTES

@@ -95,6 +95,15 @@ def test_pv_table_shape_and_daynight_structure():
     assert pv[172, noon_idx] > pv[355, noon_idx] > 0.0
 
 
+def test_pv_table_cache_normalises_scalar_types():
+    """np.float32/np.float64 callers share one cache entry with float
+    callers (the raw-float lru_cache keying used to fragment the cache)."""
+    a = processes.pv_table(150.0, 60.0)
+    b = processes.pv_table(np.float32(150.0), np.float64(60.0))
+    c = processes.pv_table(np.int64(150), 60.0)
+    assert b is a and c is a
+
+
 def test_tou_overlay_moves_peak_and_valley():
     base = np.ones((365, SPD), np.float32) * 0.10
     tou = processes.tou_overlay(base, ENV.config.dt_minutes)
@@ -244,6 +253,56 @@ def test_v2g_axis_lowers_to_params():
 
     with pytest.raises(ValueError, match="v2g_port_fraction"):
         sc.evolve(name="bad", v2g_port_fraction=1.5).make_params(ENV)
+
+
+def test_real_pack_lowers_with_catalog_under_one_compiled_step():
+    """REAL_PACK (ingested ENTSO-E/PVGIS tables) + the full synthetic
+    catalog share identical EnvParams shapes and ONE jitted step."""
+    assert len(scenarios.REAL_PACK) >= 4
+    for name in scenarios.REAL_PACK:
+        assert name in scenarios.names()
+    all_names = list(scenarios.names())
+    assert len(all_names) >= 17  # 13 synthetic/V2G + the real-data pack
+    params = [scenarios.make(n).make_params(ENV) for n in all_names]
+    step = jax.jit(ENV.step)
+    _, state = ENV.reset(jax.random.key(0), params[0])
+    action = ENV.sample_action(jax.random.key(1))
+    step(jax.random.key(2), state, action, params[0])
+    n_compiled = step._cache_size()
+    for p in params[1:]:
+        step(jax.random.key(2), state, action, p)
+    assert step._cache_size() == n_compiled
+
+
+def test_real_axis_lowers_ingested_tables():
+    from repro.data import ingest
+
+    p = scenarios.make("real_nl_2024_office").make_params(ENV)
+    dtm = ENV.config.dt_minutes
+    # prices are exactly the ingested table (no tariff overlay declared)
+    np.testing.assert_array_equal(
+        np.asarray(p.price_buy_table), ingest.load_price_table("nl_2024", dtm)
+    )
+    # PV is the peak-normalised PVGIS shape scaled by the declared plant size
+    pv = np.asarray(p.pv_kw_table)
+    np.testing.assert_allclose(
+        pv, 120.0 * ingest.load_pv_table("pvgis_nl_delft", dtm), rtol=1e-6
+    )
+    assert float(pv.max()) == pytest.approx(120.0)
+
+    # a tariff overlay composes ON TOP of the real curve
+    tou = scenarios.make("real_nl_2024_shopping_tou").make_params(ENV)
+    raw = ingest.load_price_table("nl_2024", dtm)
+    overlaid = np.asarray(tou.price_buy_table)
+    spd = raw.shape[1]
+    peak = int(19.0 / 24.0 * spd)  # inside the 17:00-21:00 peak window
+    assert np.all(overlaid[:, peak] >= raw[:, peak])
+
+    # unknown sources fail loudly at lowering time
+    with pytest.raises(KeyError, match="not a registered name"):
+        scenarios.make("real_nl_2024_office").evolve(
+            name="bad", price_source="entsoe_mars_2099"
+        ).make_params(ENV)
 
 
 def test_ppo_trains_mixed_v2g_distribution_one_compile():
