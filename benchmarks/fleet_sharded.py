@@ -15,12 +15,11 @@ machine-readable ``FLEET_SHARDED_JSON`` line and sets ``LAST_SUMMARY`` for
 """
 from __future__ import annotations
 
-import json
-
 import jax
 
 from benchmarks.fleet_throughput import bench_fleet
 from repro.launch.mesh import make_data_mesh
+from repro.obs import emit_json_line
 
 LAST_SUMMARY: dict | None = None
 
@@ -62,7 +61,7 @@ def run(quick: bool = True):
         "process_count": jax.process_count(),
         "fleet_sharded": summary,
     }
-    print("FLEET_SHARDED_JSON " + json.dumps(LAST_SUMMARY), flush=True)
+    emit_json_line("FLEET_SHARDED_JSON", LAST_SUMMARY)
     return rows
 
 

@@ -9,7 +9,6 @@ summary line (``FLEET_JSON {...}``) is emitted for dashboards/CI.
 """
 from __future__ import annotations
 
-import json
 import time
 
 import jax
@@ -17,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.core import EnvConfig, FleetEnv
 from repro.envs import FleetAdapter
+from repro.obs import emit_json_line
 
 ARCHS = ("paper_16", "deep_4x4", "single_dc_8")
 SCENARIOS = ("shopping_pv_tou", "work_solar_summer", "highway_demand_charge")
@@ -104,7 +104,7 @@ def run(quick: bool = True):
         "steps_per_sec": summary[-1]["steps_per_sec"],
         "fleet_throughput": summary,
     }
-    print("FLEET_JSON " + json.dumps({"fleet_throughput": summary}), flush=True)
+    emit_json_line("FLEET_JSON", {"fleet_throughput": summary})
     return rows
 
 

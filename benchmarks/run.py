@@ -6,17 +6,18 @@ Prints ``name,us_per_call,derived`` CSV rows (assignment format).  --full uses
 paper-scale training budgets; the default quick mode validates the same
 claims with reduced budgets suited to this single-CPU container.
 
-Every benchmark's results are also PERSISTED: ``BENCH_<name>.json`` is
-written to the repo root (git sha, device count, CSV rows, plus whatever
-summary dict the module left in its ``LAST_SUMMARY`` global) so the perf
-trajectory survives the run — CI uploads them as artifacts.
+Every benchmark's results are also PERSISTED through the shared
+observability sink (``repro.obs.write_benchmark_json``): ``BENCH_<name>.json``
+is written to the repo root (schema_version, git sha, backend/device
+provenance, CSV rows, plus whatever summary dict the module left in its
+``LAST_SUMMARY`` global) so the perf trajectory survives the run — CI
+uploads them as artifacts.  ``--metrics-out PATH`` additionally appends one
+JSONL record per benchmark (same schema as ``rl_train --metrics-out``).
 """
 from __future__ import annotations
 
 import argparse
-import json
 import os
-import subprocess
 import sys
 import time
 
@@ -40,38 +41,11 @@ MODULES = {
 }
 
 
-def _git_sha() -> str:
-    try:
-        return subprocess.check_output(
-            ["git", "rev-parse", "HEAD"], cwd=REPO_ROOT, text=True
-        ).strip()
-    except Exception:  # noqa: BLE001
-        return "unknown"
-
-
 def persist(name: str, rows, summary: dict | None, quick: bool) -> str:
-    """Write ``BENCH_<name>.json`` to the repo root; return its path."""
-    import jax
+    """Write ``BENCH_<name>.json`` via the shared obs sink; return its path."""
+    from repro.obs import write_benchmark_json
 
-    # summary first so modules can surface headline fields (steps_per_sec,
-    # num_envs) at the top level, but provenance keys always win
-    rec = dict(summary or {})
-    rec.update(
-        benchmark=name,
-        git_sha=_git_sha(),
-        device_count=jax.device_count(),
-        backend=jax.default_backend(),
-        quick=quick,
-        unix_time=int(time.time()),
-        rows=[
-            {"name": r, "us_per_call": round(float(v), 3), "derived": d}
-            for r, v, d in rows
-        ],
-    )
-    path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
-    with open(path, "w") as f:
-        json.dump(rec, f, indent=1)
-    return path
+    return write_benchmark_json(name, rows, summary=summary, quick=quick)
 
 
 def main():
@@ -81,12 +55,24 @@ def main():
     ap.add_argument(
         "--no-persist", action="store_true", help="skip writing BENCH_<name>.json"
     )
+    ap.add_argument(
+        "--metrics-out",
+        default=None,
+        metavar="PATH",
+        help="append one JSONL record per benchmark (manifest + summary + "
+        "rows) — the CI artifact sink",
+    )
     args = ap.parse_args()
 
     names = list(MODULES) if args.only is None else args.only.split(",")
     unknown = [n for n in names if n not in MODULES]
     if unknown:
         ap.error(f"unknown benchmark(s) {unknown}; choose from {list(MODULES)}")
+    writer = None
+    if args.metrics_out:
+        from repro.obs import MetricsWriter
+
+        writer = MetricsWriter(args.metrics_out, run="benchmarks", quick=not args.full)
     print("name,us_per_call,derived")
     failures = 0
     for name in names:
@@ -98,15 +84,35 @@ def main():
             rows = mod.run(quick=not args.full)
             for rname, val, derived in rows:
                 print(f"{rname},{val:.3f},{derived}", flush=True)
+            summary = getattr(mod, "LAST_SUMMARY", None)
             if not args.no_persist:
-                path = persist(
-                    name, rows, getattr(mod, "LAST_SUMMARY", None), not args.full
-                )
+                path = persist(name, rows, summary, not args.full)
                 print(f"# wrote {os.path.relpath(path, REPO_ROOT)}", flush=True)
+            if writer is not None:
+                writer.write(
+                    {
+                        "benchmark": name,
+                        "wall_s": round(time.perf_counter() - t0, 1),
+                        **(summary or {}),
+                        "rows": [
+                            {"name": r, "us_per_call": round(float(v), 3), "derived": d}
+                            for r, v, d in rows
+                        ],
+                    },
+                    kind="benchmark",
+                )
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{name},nan,FAILED: {type(e).__name__}: {e}", flush=True)
+            if writer is not None:
+                writer.write(
+                    {"benchmark": name, "error": f"{type(e).__name__}: {e}"},
+                    kind="benchmark_failure",
+                )
         print(f"# {name} took {time.perf_counter()-t0:.0f}s", flush=True)
+    if writer is not None:
+        writer.close()
+        print(f"# metrics JSONL: {writer.path}", flush=True)
     sys.exit(1 if failures else 0)
 
 

@@ -12,14 +12,17 @@ validation target — the paper reports 27x-2820x vs CPU gym envs on a GPU):
              the SB3+CUDA analogue).
 
 Also records the ``repro.envs`` wrapper-stack overhead: the same random
-rollout through ``VmapWrapper`` vs the raw hand-vmapped step (target: <= 2%
-— the wrapper is trace-time sugar, both paths lower to the same program).
+rollout through ``VmapWrapper`` vs the raw hand-vmapped step.  The wrapper
+is trace-time sugar, so the benchmark first PROVES the two paths compile to
+byte-identical HLO (``wrapper_hlo_identical``) — any timing delta is then
+measurement noise, bounded by interleaved best-of-N rounds (target: <= 2%).
 Persisted to ``BENCH_speed.json`` as ``wrapper_overhead_frac``.
 
 And the real-data row: a ``REAL_PACK`` scenario (ingested ENTSO-E prices +
 PVGIS solar) swapped into the same compiled rollout as the synthetic
-baseline — asserted one jit entry, timed interleaved.  Persisted as
-``real_vs_synthetic_frac`` (table provenance must be perf-neutral).
+baseline — guarded by the recompile sentinel (``repro.obs.compile_guard``),
+timed interleaved.  Persisted as ``real_vs_synthetic_frac`` (table
+provenance must be perf-neutral).
 """
 from __future__ import annotations
 
@@ -32,6 +35,7 @@ import numpy as np
 from benchmarks.python_ref_env import PythonChargax
 from repro.core import ChargaxEnv, EnvConfig
 from repro.envs import VmapWrapper
+from repro.obs import cache_entries, compile_guard
 from repro.rl import PPOConfig, make_train
 
 
@@ -87,14 +91,17 @@ def bench_jax_random(
 
 
 def bench_wrapper_overhead(
-    n_steps: int = 100_000, n_envs: int = 1024, rounds: int = 3,
-) -> tuple[float, float]:
-    """(seconds raw, seconds wrapped) for the same random rollout.
+    n_steps: int = 100_000, n_envs: int = 1024, rounds: int = 6,
+) -> tuple[float, float, bool]:
+    """(seconds raw, seconds wrapped, hlo_identical) for the same rollout.
 
-    The two programs are identical computations (VmapWrapper is trace-time
-    sugar), so the timing rounds are *interleaved* raw/wrapped and the min
-    per path is reported — host-load drift between two back-to-back
-    measurements would otherwise masquerade as wrapper overhead.
+    VmapWrapper is trace-time sugar, so raw and wrapped MUST lower to the
+    same program — this benchmark asserts it by comparing the compiled HLO
+    text of both paths byte-for-byte (``hlo_identical``).  With identity
+    proven, any residual timing delta is host noise, not wrapper cost; the
+    rounds are still *interleaved* raw/wrapped with the min per path
+    reported, so one-sided load drift on a shared machine cannot masquerade
+    as overhead.
     """
     env = ChargaxEnv(EnvConfig())
     params = env.default_params
@@ -104,6 +111,12 @@ def bench_wrapper_overhead(
 
     key = jax.random.key(0)
     _, state = venv.reset(key, params)
+    # the ground truth: both paths are ONE program (compare compiled HLO,
+    # i.e. post-optimisation — stronger than comparing the stableHLO input)
+    hlo = [
+        fn.lower(key, state, params).compile().as_text() for fn in (raw, wrapped)
+    ]
+    hlo_identical = hlo[0] == hlo[1]
     for fn in (raw, wrapped):  # compile both before any timing
         st, s = fn(key, state, params)
         jax.block_until_ready(s)
@@ -115,7 +128,7 @@ def bench_wrapper_overhead(
             _, s = fn(key, state, params)
             jax.block_until_ready(s)
             best[is_wrapped] = min(best[is_wrapped], time.perf_counter() - t0)
-    return best[False], best[True]
+    return best[False], best[True], hlo_identical
 
 
 def bench_real_vs_synthetic(
@@ -126,8 +139,10 @@ def bench_real_vs_synthetic(
     Proves table provenance is perf-neutral: a real-data scenario
     (``REAL_PACK``: ENTSO-E prices + PVGIS solar from vendored extracts)
     swaps into the *same compiled program* as the synthetic baseline —
-    asserted via the jit cache size — and steps at the same rate.
-    Interleaved timing, min per table, as in ``bench_wrapper_overhead``.
+    enforced by the recompile sentinel (``repro.obs.compile_guard``, which
+    names the offending function + avals if the swap ever recompiles) —
+    and steps at the same rate.  Interleaved timing, min per table, as in
+    ``bench_wrapper_overhead``.
     """
     from repro import scenarios
 
@@ -139,14 +154,12 @@ def bench_real_vs_synthetic(
 
     key = jax.random.key(0)
     _, state = venv.reset(key, p_synth)
-    for p in (p_synth, p_real):
-        _, s = rollout(key, state, p)
+    _, s = rollout(key, state, p_synth)  # warm-up: the one allowed compile
+    jax.block_until_ready(s)
+    with compile_guard("real-data params swap"):
+        _, s = rollout(key, state, p_real)
         jax.block_until_ready(s)
-    if rollout._cache_size() != 1:
-        raise AssertionError(
-            "real-data params recompiled the rollout "
-            f"({rollout._cache_size()} jit entries)"
-        )
+    assert cache_entries(rollout) == 1
 
     best = {"synth": float("inf"), "real": float("inf")}
     for _ in range(max(rounds, 1)):
@@ -274,7 +287,7 @@ def run(quick: bool = True) -> list[tuple[str, float, str]]:
     rows = []
     n_jax = 100_000
     n_py = 10_000 if quick else 50_000
-    t_jax, t_wrapped = bench_wrapper_overhead(n_jax, rounds=4)
+    t_jax, t_wrapped, hlo_same = bench_wrapper_overhead(n_jax, rounds=6)
     t_py = bench_python_random(n_py)
     us_jax = t_jax / n_jax * 1e6
     us_py = t_py / n_py * 1e6
@@ -285,7 +298,8 @@ def run(quick: bool = True) -> list[tuple[str, float, str]]:
             "random_chargax_wrapped",
             t_wrapped / n_jax * 1e6,
             f"{n_jax/t_wrapped:,.0f} steps/s VmapWrapper "
-            f"overhead={overhead:+.2%} (target <=2%)",
+            f"overhead={overhead:+.2%} (target <=2%) "
+            f"hlo_identical={hlo_same}",
         )
     )
     rows.append(("random_python_ref", us_py, f"{n_py/t_py:,.0f} steps/s"))
@@ -322,6 +336,7 @@ def run(quick: bool = True) -> list[tuple[str, float, str]]:
         "random_env_steps_per_sec": round(n_jax / t_jax, 1),
         "wrapped_env_steps_per_sec": round(n_jax / t_wrapped, 1),
         "wrapper_overhead_frac": round(overhead, 4),
+        "wrapper_hlo_identical": hlo_same,
         "real_data_env_steps_per_sec": round(n_jax / t_real, 1),
         "real_vs_synthetic_frac": round(real_frac, 4),
         "python_ref_steps_per_sec": round(n_py / t_py, 1),

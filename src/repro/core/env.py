@@ -35,6 +35,7 @@ from repro.core.transition import (
 )
 from repro.envs import spaces
 from repro.envs.base import Environment, TimeStep
+from repro.obs import annotate
 from repro.utils import replace, steps_per_day
 
 
@@ -279,67 +280,73 @@ class ChargaxEnv(Environment):
         dt = cfg.dt_hours
 
         # -- decode action ------------------------------------------------
-        if cfg.action_mode == "direct":
-            tgt_evse, tgt_batt = decode_action(
-                action,
-                cfg.discretization,
-                cfg.allow_v2g,
-                params.evse_max_current,
-                params.batt_max_current,
-                v2g_mask=params.evse_v2g_mask,
-            )
-        elif cfg.action_mode == "delta":  # paper's additive form
-            d_evse, d_batt = decode_action(
-                action,
-                cfg.discretization,
-                True,  # deltas may be negative even without v2g...
-                params.evse_max_current,
-                params.batt_max_current,
-            )
-            tgt_evse = state.evse_current + d_evse
-            if not cfg.allow_v2g:
-                tgt_evse = jnp.maximum(tgt_evse, 0.0)  # ...but targets may not
-            else:  # charge-only hardware never targets negative amps
-                tgt_evse = jnp.where(
-                    params.evse_v2g_mask > 0.5, tgt_evse, jnp.maximum(tgt_evse, 0.0)
+        with annotate("env/decode"):
+            if cfg.action_mode == "direct":
+                tgt_evse, tgt_batt = decode_action(
+                    action,
+                    cfg.discretization,
+                    cfg.allow_v2g,
+                    params.evse_max_current,
+                    params.batt_max_current,
+                    v2g_mask=params.evse_v2g_mask,
                 )
-            tgt_batt = state.batt_current + d_batt
-        else:
-            raise ValueError(f"unknown action_mode {cfg.action_mode!r}")
+            elif cfg.action_mode == "delta":  # paper's additive form
+                d_evse, d_batt = decode_action(
+                    action,
+                    cfg.discretization,
+                    True,  # deltas may be negative even without v2g...
+                    params.evse_max_current,
+                    params.batt_max_current,
+                )
+                tgt_evse = state.evse_current + d_evse
+                if not cfg.allow_v2g:
+                    tgt_evse = jnp.maximum(tgt_evse, 0.0)  # ...but targets may not
+                else:  # charge-only hardware never targets negative amps
+                    tgt_evse = jnp.where(
+                        params.evse_v2g_mask > 0.5, tgt_evse, jnp.maximum(tgt_evse, 0.0)
+                    )
+                tgt_batt = state.batt_current + d_batt
+            else:
+                raise ValueError(f"unknown action_mode {cfg.action_mode!r}")
 
         # -- 4-stage transition (paper App. A.2) ---------------------------
-        applied = apply_actions(params, state, tgt_evse, tgt_batt, dt)
-        charged = charge_cars(params, state, applied, dt)
-        departed = depart_cars(charged.state)
-        key, k_arr = jax.random.split(key)
-        arrived = arrive_cars(params, departed.state, k_arr)
+        with annotate("env/apply_actions"):
+            applied = apply_actions(params, state, tgt_evse, tgt_batt, dt)
+        with annotate("env/charge_cars"):
+            charged = charge_cars(params, state, applied, dt)
+        with annotate("env/depart_arrive"):
+            departed = depart_cars(charged.state)
+            key, k_arr = jax.random.split(key)
+            arrived = arrive_cars(params, departed.state, k_arr)
 
         # -- reward ---------------------------------------------------------
-        spd = state.price_buy.shape[0]
-        e_pv = (
-            params.pv_kw_table[
-                jnp.mod(state.day, params.pv_kw_table.shape[0]), jnp.mod(state.t, spd)
-            ]
-            * dt
-        )
-        energies = step_energies(
-            params, charged.e_car, charged.e_batt_net, e_pv, charged.e_repaid
-        )
-        p_buy = state.price_buy[jnp.mod(state.t, spd)]
-        reward, pi, pen = compute_reward(
-            params,
-            energies,
-            p_buy,
-            applied.constraint_excess,
-            departed.missing_kwh,
-            departed.overtime_steps,
-            departed.early_steps,
-            arrived.n_rejected,
-            charged.e_car,
-            state.t,
-            state.price_buy,
-            dt,
-        )
+        with annotate("env/reward"):
+            spd = state.price_buy.shape[0]
+            e_pv = (
+                params.pv_kw_table[
+                    jnp.mod(state.day, params.pv_kw_table.shape[0]),
+                    jnp.mod(state.t, spd),
+                ]
+                * dt
+            )
+            energies = step_energies(
+                params, charged.e_car, charged.e_batt_net, e_pv, charged.e_repaid
+            )
+            p_buy = state.price_buy[jnp.mod(state.t, spd)]
+            reward, pi, pen = compute_reward(
+                params,
+                energies,
+                p_buy,
+                applied.constraint_excess,
+                departed.missing_kwh,
+                departed.overtime_steps,
+                departed.early_steps,
+                arrived.n_rejected,
+                charged.e_car,
+                state.t,
+                state.price_buy,
+                dt,
+            )
 
         # -- calendar rollover: at midnight advance the day (mod table length)
         # and reload the price row, so multi-day episodes see day-1+ prices,
@@ -372,8 +379,16 @@ class ChargaxEnv(Environment):
             "rejected": pen.rejected,
             "arrived": arrived.n_arrived.astype(jnp.float32),
             "price_buy": p_buy,
+            # per-step KPI scalars for the obs metrics accumulators (unused
+            # outputs are DCE'd by XLA, so consumers that ignore them pay
+            # nothing): kWh into / out of cars this step, open V2G debt
+            "energy_delivered": jnp.sum(jnp.maximum(charged.e_car, 0.0)),
+            "energy_discharged": jnp.sum(jnp.maximum(-charged.e_car, 0.0)),
+            "v2g_debt": jnp.sum(new_state.v2g_debt),
         }
-        return TimeStep(self.observe(new_state, params), new_state, reward, done, info)
+        with annotate("env/observe"):
+            obs = self.observe(new_state, params)
+        return TimeStep(obs, new_state, reward, done, info)
 
     # ------------------------------------------------------------------
     # Observation

@@ -33,6 +33,8 @@ import jax.numpy as jnp
 
 from repro.envs import spaces
 from repro.envs.base import Environment, TimeStep
+from repro.obs.metrics import MetricsAccumulator
+from repro.obs.trace import annotate
 
 
 class Wrapper(Environment):
@@ -98,12 +100,13 @@ class AutoReset(Wrapper):
     def step(
         self, key: jax.Array, state: Any, action: Any, params: Any | None = None
     ) -> TimeStep:
-        k_step, k_reset = jax.random.split(key)
-        ts = self._env.step(k_step, state, action, params)
-        r_obs, r_state = self._env.reset(k_reset, params)
-        obs = _where_done(ts.done, r_obs, ts.obs)
-        new_state = _where_done(ts.done, r_state, ts.state)
-        return TimeStep(obs, new_state, ts.reward, ts.done, ts.info)
+        with annotate("wrap/AutoReset"):
+            k_step, k_reset = jax.random.split(key)
+            ts = self._env.step(k_step, state, action, params)
+            r_obs, r_state = self._env.reset(k_reset, params)
+            obs = _where_done(ts.done, r_obs, ts.obs)
+            new_state = _where_done(ts.done, r_state, ts.state)
+            return TimeStep(obs, new_state, ts.reward, ts.done, ts.info)
 
 
 class LogState(NamedTuple):
@@ -114,6 +117,8 @@ class LogState(NamedTuple):
     episode_length: jnp.ndarray
     returned_episode_return: jnp.ndarray
     returned_episode_length: jnp.ndarray
+    # in-jit KPI accumulator (None unless the wrapper was given metrics=…)
+    metrics: MetricsAccumulator | None = None
 
 
 class LogWrapper(Wrapper):
@@ -124,38 +129,62 @@ class LogWrapper(Wrapper):
     the most recently completed episode, frozen between episode ends) and
     ``info["returned_episode"]`` (this step finished an episode).  Wrap it
     *outside* :class:`AutoReset` so the running totals survive the restart.
+
+    ``metrics=`` names per-step ``info`` scalars (``"profit"``,
+    ``"energy_delivered"``, ...; ``"reward"`` is always available) to fold
+    into a :class:`repro.obs.MetricsAccumulator` carried in
+    :class:`LogState` — KPIs accumulate on device through the rollout scan
+    and flush to the host once, after it (``state.metrics.flush()``).  This
+    is how PPO and eval report domain KPIs per scenario without extra
+    device syncs.  Works over any inner env whose ``info`` carries the
+    named scalars, including :class:`FleetAdapter` fleets (per-station
+    lanes accumulate independently).
     """
+
+    def __init__(self, env: Environment, metrics: tuple[str, ...] = ()):
+        super().__init__(env)
+        self.metric_names = tuple(metrics)
+
+    def _make_acc(self, batch: tuple[int, ...]) -> MetricsAccumulator | None:
+        if not self.metric_names:
+            return None
+        return MetricsAccumulator.create(self.metric_names, batch_shape=batch)
 
     def reset(self, key: jax.Array, params: Any | None = None):
         obs, env_state = self._env.reset(key, params)
         batch = jnp.shape(obs)[:-1]
         zf = jnp.zeros(batch, jnp.float32)
         zi = jnp.zeros(batch, jnp.int32)
-        return obs, LogState(env_state, zf, zi, zf, zi)
+        return obs, LogState(env_state, zf, zi, zf, zi, self._make_acc(batch))
 
     def step(
         self, key: jax.Array, state: LogState, action: Any, params: Any | None = None
     ) -> TimeStep:
-        ts = self._env.step(key, state.env_state, action, params)
-        ep_ret = state.episode_return + ts.reward
-        ep_len = state.episode_length + 1
-        done = ts.done
-        new_state = LogState(
-            env_state=ts.state,
-            episode_return=jnp.where(done, 0.0, ep_ret),
-            episode_length=jnp.where(done, 0, ep_len),
-            returned_episode_return=jnp.where(
-                done, ep_ret, state.returned_episode_return
-            ),
-            returned_episode_length=jnp.where(
-                done, ep_len, state.returned_episode_length
-            ),
-        )
-        info = dict(ts.info)
-        info["episode_return"] = new_state.returned_episode_return
-        info["episode_length"] = new_state.returned_episode_length
-        info["returned_episode"] = done
-        return TimeStep(ts.obs, new_state, ts.reward, done, info)
+        with annotate("wrap/LogWrapper"):
+            ts = self._env.step(key, state.env_state, action, params)
+            ep_ret = state.episode_return + ts.reward
+            ep_len = state.episode_length + 1
+            done = ts.done
+            acc = state.metrics
+            if acc is not None:
+                acc = acc.update({"reward": ts.reward, **ts.info})
+            new_state = LogState(
+                env_state=ts.state,
+                episode_return=jnp.where(done, 0.0, ep_ret),
+                episode_length=jnp.where(done, 0, ep_len),
+                returned_episode_return=jnp.where(
+                    done, ep_ret, state.returned_episode_return
+                ),
+                returned_episode_length=jnp.where(
+                    done, ep_len, state.returned_episode_length
+                ),
+                metrics=acc,
+            )
+            info = dict(ts.info)
+            info["episode_return"] = new_state.returned_episode_return
+            info["episode_length"] = new_state.returned_episode_length
+            info["returned_episode"] = done
+            return TimeStep(ts.obs, new_state, ts.reward, done, info)
 
 
 class VmapWrapper(Wrapper):
@@ -255,20 +284,21 @@ class VmapWrapper(Wrapper):
     def step(
         self, key: jax.Array, state: Any, action: Any, params: Any | None = None
     ) -> TimeStep:
-        params = self._resolve(params)
-        keys = jax.random.split(key, self.num_envs)
-        if self.num_scenarios is None:
-            return self._v_step(keys, state, action, params)
-        ts = self._v_step(
-            self._nest(keys), self._nest(state), self._nest(action), params
-        )
-        return TimeStep(
-            self._flat(ts.obs),
-            self._flat(ts.state),
-            self._flat(ts.reward),
-            self._flat(ts.done),
-            self._flat(ts.info),
-        )
+        with annotate("wrap/VmapWrapper"):
+            params = self._resolve(params)
+            keys = jax.random.split(key, self.num_envs)
+            if self.num_scenarios is None:
+                return self._v_step(keys, state, action, params)
+            ts = self._v_step(
+                self._nest(keys), self._nest(state), self._nest(action), params
+            )
+            return TimeStep(
+                self._flat(ts.obs),
+                self._flat(ts.state),
+                self._flat(ts.reward),
+                self._flat(ts.done),
+                self._flat(ts.info),
+            )
 
     @property
     def observation_space(self) -> spaces.Space:
@@ -292,8 +322,9 @@ class FleetAdapter(Wrapper):
     def step(
         self, key: jax.Array, state: Any, action: Any, params: Any | None = None
     ) -> TimeStep:
-        obs, state, reward, done, info = self._env.step(key, state, action, params)
-        return TimeStep(obs, state, reward, done, info)
+        with annotate("wrap/FleetAdapter"):
+            obs, state, reward, done, info = self._env.step(key, state, action, params)
+            return TimeStep(obs, state, reward, done, info)
 
     @property
     def observation_space(self) -> spaces.Space:

@@ -21,6 +21,7 @@ import json
 import time
 
 import jax
+import numpy as np
 
 from repro.analysis.hlo import collective_stats, cost_analysis_dict
 from repro.core import ChargaxEnv, EnvConfig
@@ -99,11 +100,50 @@ def _expand_scenarios(spec: str) -> list[str]:
     return names
 
 
+def _profile_probe(args, cfg, env, shard_envs, scenario_params, obs):
+    """Emit a perfetto-viewable trace of ONE representative PPO update.
+
+    The real training run stays untraced (the CPU tracer records every op
+    execution — tracing thousands of updates produces multi-GB buffers and
+    a multi-minute flush).  Every update executes the same compiled program,
+    so one update IS the profile.  Inside the session:
+
+      * trace+lower+compile of the probe happens with annotations ON, so
+        the host timeline carries the named phase spans (``env/*``,
+        ``wrap/*``, ``ppo/*``) nested exactly as the program is structured;
+      * one update executes with minimal loop trip counts (short rollout,
+        one epoch/minibatch — op set identical, fewer repeated events), so
+        the device timeline shows the runtime op mix.
+    """
+    probe_rollout = min(args.rollout, 8)
+    probe_cfg = PPOConfig(
+        total_timesteps=cfg.num_envs * probe_rollout,
+        num_envs=cfg.num_envs,
+        rollout_steps=probe_rollout,
+        num_minibatches=1,
+        update_epochs=1,
+        hidden=cfg.hidden,
+    )
+    probe = make_train(
+        probe_cfg, env, shard_envs=shard_envs, scenario_params=scenario_params
+    )
+    key = jax.random.key(args.seed)
+    with obs.trace_session(args.profile, keep_xplane=False):
+        with obs.annotate("profile/trace_and_compile"):
+            compiled = jax.jit(probe).lower(key).compile()
+        with obs.annotate("profile/run_one_update"):
+            pout = compiled(key)
+            jax.block_until_ready(pout["metrics"]["rollout_reward"])
+
+
 def run_train(args):
+    from repro import obs
+
     env = ChargaxEnv(
         EnvConfig(scenario=args.scenario, traffic=args.traffic, allow_v2g=args.v2g)
     )
-    # typed env surface (repro.envs): PPO wraps this in AutoReset(VmapWrapper)
+    # typed env surface (repro.envs): PPO wraps this in
+    # LogWrapper(AutoReset(VmapWrapper)) with on-device KPI accumulation
     print(f"[ppo] obs={env.observation_space} actions={env.action_space}")
     cfg = PPOConfig(
         total_timesteps=args.timesteps,
@@ -128,13 +168,23 @@ def run_train(args):
     if scenario_names:
         from repro import scenarios as _scen
 
-        scenario_params = _scen.stack_params(
-            [_scen.make(n).make_params(env) for n in scenario_names]
-        )
+        per_scenario = [_scen.make(n).make_params(env) for n in scenario_names]
+        scenario_params = _scen.stack_params(per_scenario)
         print(
             f"[ppo] training across {len(scenario_names)} scenarios "
             "(one table copy each)"
         )
+        if args.preflight:
+            # recompile sentinel: every selected scenario must reuse ONE
+            # compiled step (pure array swaps) — seconds to check here vs
+            # minutes of silently duplicated training compiles later
+            obs.assert_one_compiled_step(
+                env, per_scenario, label=f"scenarios {','.join(scenario_names)}"
+            )
+            print(
+                f"[obs] preflight: {len(per_scenario)} scenarios share one "
+                "compiled step (no recompiles)"
+            )
 
     # multi-device: shard the env batch over a data mesh built from every
     # visible device; single device degrades to no mesh / no constraints
@@ -163,13 +213,55 @@ def run_train(args):
         t0 = time.perf_counter()
         out = train(jax.random.key(args.seed))
         jax.block_until_ready(out["metrics"]["rollout_reward"])
-    wall = time.perf_counter() - t0
+        wall = time.perf_counter() - t0
+        if args.profile:
+            _profile_probe(args, cfg, env, shard_envs, scenario_params, obs)
     rr = out["metrics"]["rollout_reward"]
     print(
         f"[ppo] {args.timesteps:,} steps in {wall:.1f}s "
         f"({args.timesteps/wall:,.0f} env-steps/s) | "
         f"reward first->last: {float(rr[0]):.1f} -> {float(rr[-1]):.1f}"
     )
+    kpis = {
+        k.split("/", 1)[1]: float(np.asarray(v)[-1])
+        for k, v in out["metrics"].items()
+        if k.startswith("kpi/")
+    }
+    if kpis:
+        print(
+            "[kpi] last update, per env-step: "
+            + " ".join(f"{k}={v:.3f}" for k, v in sorted(kpis.items()))
+        )
+    if args.profile:
+        trace = obs.latest_trace(args.profile)
+        print(
+            f"[obs] profile trace: {trace} "
+            "(open at https://ui.perfetto.dev — phases env/*, wrap/*, ppo/*)"
+        )
+    writer = None
+    if args.metrics_out:
+        writer = obs.MetricsWriter(
+            args.metrics_out,
+            run="rl_train",
+            scenario=args.scenario,
+            scenarios=scenario_names,
+            timesteps=args.timesteps,
+            num_envs=cfg.num_envs,
+            seed=args.seed,
+        )
+        writer.write(
+            {
+                "wall_s": round(wall, 2),
+                "env_steps_per_sec": round(args.timesteps / wall, 1),
+                "rollout_reward_first": float(rr[0]),
+                "rollout_reward_last": float(rr[-1]),
+                "episode_return_last": float(
+                    np.asarray(out["metrics"]["episode_return"])[-1]
+                ),
+                **{f"kpi/{k}": v for k, v in kpis.items()},
+            },
+            kind="train",
+        )
     if args.v2g and scenario_names:
         # discharge/degradation report: trained agent vs the always-max and
         # arbitrage baselines on the first (V2G-heavy) scenario of the mix
@@ -185,7 +277,8 @@ def run_train(args):
         }
         for name, (pol, pol_params) in policies.items():
             res = evaluate(
-                env, pol, pol_params, jax.random.key(17), 16, env_params=sc_params
+                env, pol, pol_params, jax.random.key(17), 16, env_params=sc_params,
+                writer=writer, tag=f"{scenario_names[0]}/{name}",
             )
             print(
                 f"[v2g eval] {scenario_names[0]} {name}: "
@@ -194,6 +287,9 @@ def run_train(args):
                 f"discharge_frac={res['v2g_discharge_frac']:.3f} "
                 f"missing={res['missing_kwh']:.1f}kWh"
             )
+    if writer is not None:
+        writer.close()
+        print(f"[obs] metrics JSONL: {writer.path}")
     return out
 
 
@@ -220,6 +316,26 @@ def main(argv=None):
     ap.add_argument("--rollout", type=int, default=300)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="results/ppo_dryrun.json")
+    ap.add_argument(
+        "--profile",
+        default=None,
+        metavar="DIR",
+        help="write a perfetto-viewable trace of the training run to DIR "
+        "(phases annotated: env/*, wrap/*, ppo/*; open at ui.perfetto.dev)",
+    )
+    ap.add_argument(
+        "--metrics-out",
+        default=None,
+        metavar="PATH",
+        help="append run manifest + train/eval KPI records to a JSONL sink",
+    )
+    ap.add_argument(
+        "--preflight",
+        action=argparse.BooleanOptionalAction,
+        default=True,
+        help="with --scenarios: assert the catalog shares ONE compiled step "
+        "before training (recompile sentinel); --no-preflight skips",
+    )
     args = ap.parse_args(argv)
     if args.dryrun:
         return run_dryrun(args)

@@ -1,0 +1,79 @@
+"""Telemetry subsystem: in-jit metrics, trace annotations, recompile
+sentinel, and unified run sinks.
+
+The paper's headline claim is raw speed; this package is how the repro
+*explains* its own numbers.  Four pieces, each usable on its own:
+
+``metrics``
+    :class:`MetricsAccumulator` — a pure pytree of named scalar sums /
+    maxes carried through jitted rollout scans (no host syncs) and flushed
+    to plain numbers at the host boundary.  Exposed by
+    ``repro.envs.LogWrapper(..., metrics=...)`` and consumed by PPO's
+    per-update KPI report.
+
+``trace``
+    :func:`annotate` — ``jax.named_scope`` + ``jax.profiler.TraceAnnotation``
+    phase markers over env.step stages, each wrapper layer and the PPO
+    phases.  Off by default (zero-cost: the compiled program is proven
+    byte-identical); enabled by ``rl_train --profile DIR`` /
+    :func:`trace_session`, which emits a perfetto-viewable trace.
+
+``guard``
+    :func:`compile_guard` — the recompile sentinel.  Counts jit
+    compilations across a region and raises :class:`RecompileError` with
+    the offending function names and argument avals, turning the "one jit
+    entry for the whole scenario catalog" invariant into a reusable
+    runtime guard (tests, CI protocol-conformance, ``rl_train``
+    preflight).
+
+``sinks``
+    :class:`MetricsWriter` (JSONL) + :func:`run_manifest` (git sha,
+    backend, device count, ``schema_version``) + the shared
+    ``BENCH_<name>.json`` persistence used by ``benchmarks.run``,
+    ``rl_train`` and eval — one schema instead of per-module hand-rolled
+    JSON.
+
+See ``docs/observability.md`` for the metrics catalog, trace-phase names
+and how to read a profile.
+"""
+from repro.obs.guard import (
+    RecompileError,
+    assert_one_compiled_step,
+    cache_entries,
+    compile_guard,
+)
+from repro.obs.metrics import MetricsAccumulator
+from repro.obs.sinks import (
+    SCHEMA_VERSION,
+    MetricsWriter,
+    emit_json_line,
+    run_manifest,
+    write_benchmark_json,
+)
+from repro.obs.trace import (
+    annotate,
+    check_trace_budget,
+    enable_trace_annotations,
+    latest_trace,
+    trace_annotations_enabled,
+    trace_session,
+)
+
+__all__ = [
+    "MetricsAccumulator",
+    "MetricsWriter",
+    "RecompileError",
+    "SCHEMA_VERSION",
+    "annotate",
+    "assert_one_compiled_step",
+    "cache_entries",
+    "check_trace_budget",
+    "compile_guard",
+    "emit_json_line",
+    "enable_trace_annotations",
+    "latest_trace",
+    "run_manifest",
+    "trace_annotations_enabled",
+    "trace_session",
+    "write_benchmark_json",
+]

@@ -1,0 +1,162 @@
+"""Unified run sinks: JSONL metrics writer + run manifests + BENCH JSON.
+
+Every artifact this repo persists — ``BENCH_<name>.json`` from
+``benchmarks.run``, training/eval metrics from ``rl_train``, machine-
+readable benchmark stdout lines — goes through this module, so provenance
+(git sha, backend, device count, ``schema_version``) is recorded once,
+identically, everywhere.  Before this module each benchmark hand-rolled its
+own ``json.dump`` with its own field set.
+
+Schema (``SCHEMA_VERSION``):
+
+* every record carries ``schema_version``;
+* file-level artifacts embed the :func:`run_manifest` fields at top level
+  (BENCH JSON) or as a leading ``{"kind": "manifest"}`` line (JSONL);
+* JSONL records are one JSON object per line with a ``kind`` tag
+  (``manifest`` / ``metrics`` / ``eval`` / ``bench``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import time
+from typing import Any, IO
+
+import numpy as np
+
+SCHEMA_VERSION = 1
+
+REPO_ROOT = os.path.abspath(
+    os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "..", "..")
+)
+
+
+def git_sha(root: str | None = None) -> str:
+    """HEAD sha of the repo (``"unknown"`` outside a checkout)."""
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "HEAD"],
+            cwd=root or REPO_ROOT,
+            text=True,
+            stderr=subprocess.DEVNULL,
+        ).strip()
+    except Exception:  # noqa: BLE001
+        return "unknown"
+
+
+def run_manifest(**extra: Any) -> dict:
+    """Provenance every persisted artifact shares: schema version, git sha,
+    jax/backend/device identity, wall-clock.  ``extra`` keys merge on top
+    (callers add e.g. ``benchmark=...`` or the CLI args)."""
+    import jax
+
+    rec = {
+        "schema_version": SCHEMA_VERSION,
+        "git_sha": git_sha(),
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "process_count": jax.process_count(),
+        "unix_time": int(time.time()),
+    }
+    rec.update(extra)
+    return rec
+
+
+def to_jsonable(obj: Any) -> Any:
+    """Recursively convert numpy/jax scalars and arrays to plain python."""
+    if isinstance(obj, dict):
+        return {str(k): to_jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [to_jsonable(v) for v in obj]
+    if isinstance(obj, (np.floating, np.integer, np.bool_)):
+        return obj.item()
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    if hasattr(obj, "dtype") and hasattr(obj, "tolist"):  # jax arrays
+        return np.asarray(obj).tolist()
+    return obj
+
+
+class MetricsWriter:
+    """Append-only JSONL metrics sink.
+
+    Opens (creating directories), writes one :func:`run_manifest` line, then
+    one JSON object per :meth:`write` call — the shared persistence for
+    ``rl_train`` metrics, eval results and benchmark summaries.  CI uploads
+    the file as an artifact.
+
+        with MetricsWriter("results/metrics.jsonl", run="ppo") as w:
+            w.write({"update": 3, "kpi/profit": 12.5})
+    """
+
+    def __init__(self, path: str, mode: str = "a", **manifest_extra: Any):
+        self.path = path
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        self._f: IO[str] | None = open(path, mode)
+        self.manifest = run_manifest(**manifest_extra)
+        self._emit({"kind": "manifest", **self.manifest})
+
+    def _emit(self, record: dict) -> None:
+        if self._f is None:
+            raise ValueError(f"MetricsWriter({self.path!r}) is closed")
+        self._f.write(json.dumps(to_jsonable(record)) + "\n")
+        self._f.flush()
+
+    def write(self, record: dict, kind: str = "metrics") -> None:
+        """Append one record (``kind`` tags it; ``schema_version`` stamped)."""
+        self._emit({"kind": kind, "schema_version": SCHEMA_VERSION, **record})
+
+    def close(self) -> None:
+        if self._f is not None:
+            self._f.close()
+            self._f = None
+
+    def __enter__(self) -> "MetricsWriter":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()
+
+
+def read_jsonl(path: str) -> list[dict]:
+    """Load a JSONL file back into a list of records (tests, dashboards)."""
+    with open(path) as f:
+        return [json.loads(line) for line in f if line.strip()]
+
+
+def write_benchmark_json(
+    name: str,
+    rows: list[tuple[str, float, str]],
+    summary: dict | None = None,
+    quick: bool = True,
+    root: str | None = None,
+) -> str:
+    """The ONE ``BENCH_<name>.json`` writer (used by ``benchmarks.run``).
+
+    Layout matches the historical files — summary fields at top level so
+    headline numbers (steps_per_sec, wrapper_overhead_frac, ...) stay
+    greppable — plus the shared manifest fields and ``schema_version``.
+    Provenance keys always win over summary keys.  Returns the path.
+    """
+    rec = dict(summary or {})
+    rec.update(
+        run_manifest(benchmark=name, quick=quick),
+        rows=[
+            {"name": r, "us_per_call": round(float(v), 3), "derived": d}
+            for r, v, d in rows
+        ],
+    )
+    path = os.path.join(root or REPO_ROOT, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(to_jsonable(rec), f, indent=1)
+    return path
+
+
+def emit_json_line(tag: str, obj: dict) -> str:
+    """Print a machine-readable ``TAG {json}`` stdout line (the FLEET_JSON
+    pattern, now shared) and return it."""
+    line = f"{tag} " + json.dumps(to_jsonable(obj))
+    print(line, flush=True)
+    return line

@@ -2,7 +2,9 @@
 
 Episode batching goes through :class:`repro.envs.VmapWrapper` — the same
 wrapper PPO trains through — so evaluation speaks the ``Environment``
-protocol and needs no hand-rolled vmap axes.
+protocol and needs no hand-rolled vmap axes.  Results can be persisted to
+the shared JSONL sink (``writer=``, a :class:`repro.obs.MetricsWriter`) so
+eval KPIs land in the same schema as training metrics and benchmarks.
 """
 from __future__ import annotations
 
@@ -11,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.core.state import EnvParams
 from repro.envs import Environment, VmapWrapper
+from repro.obs import annotate
 
 
 def evaluate(
@@ -21,6 +24,8 @@ def evaluate(
     num_episodes: int = 16,
     env_params: EnvParams | None = None,
     params_axis: int | None = None,
+    writer=None,
+    tag: str | None = None,
 ) -> dict:
     """Run ``num_episodes`` full episodes in parallel; return mean metrics.
 
@@ -28,6 +33,9 @@ def evaluate(
     parameter pytree to every episode; ``0`` maps a stacked ``(S, ...)``
     pytree (scenario catalog, fleet slices) per-episode, requiring
     ``num_episodes`` to equal the stack size S.
+
+    ``writer``/``tag``: optionally append the result dict to a
+    :class:`repro.obs.MetricsWriter` JSONL sink as a ``kind="eval"`` record.
     """
     env_params = env_params if env_params is not None else env.default_params
     if params_axis is not None:
@@ -51,10 +59,11 @@ def evaluate(
             ts = venv.step(k_step, state, action, env_params)
             return (ts.obs, ts.state, key, ep_reward + ts.reward), None
 
-        (obs, state, _, ep_reward), _ = jax.lax.scan(
-            step_fn, (obs, state, key, jnp.zeros(num_episodes)), None,
-            env.config.episode_steps,
-        )
+        with annotate("eval/rollout"):
+            (obs, state, _, ep_reward), _ = jax.lax.scan(
+                step_fn, (obs, state, key, jnp.zeros(num_episodes)), None,
+                env.config.episode_steps,
+            )
         delivered = state.energy_delivered.mean()
         discharged = state.energy_discharged.mean()
         return {
@@ -73,4 +82,10 @@ def evaluate(
             "overtime_steps": state.overtime_steps_cum.mean(),
         }
 
-    return {k: float(v) for k, v in run(key).items()}
+    result = {k: float(v) for k, v in run(key).items()}
+    if writer is not None:
+        writer.write(
+            {**({"tag": tag} if tag else {}), "num_episodes": num_episodes, **result},
+            kind="eval",
+        )
+    return result

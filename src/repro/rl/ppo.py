@@ -26,9 +26,23 @@ import jax.numpy as jnp
 
 from repro.core.state import EnvParams
 from repro.distributed import env_sharding
-from repro.envs import AutoReset, Environment, VmapWrapper
+from repro.envs import AutoReset, Environment, LogWrapper, VmapWrapper
+from repro.obs import annotate
 from repro.optim import AdamWConfig, adamw_init, adamw_update, apply_updates, linear_anneal
 from repro.rl import networks
+
+# domain KPIs accumulated on device through the rollout scan (LogWrapper's
+# MetricsAccumulator) and reported per update as ``metrics["kpi/<name>"]`` —
+# batch-mean per-env-step rates, no extra device syncs.  All are per-step
+# scalars the env already emits in ``info``.
+DEFAULT_KPI_METRICS = (
+    "profit",
+    "energy_delivered",
+    "energy_discharged",
+    "v2g_debt",
+    "missing_kwh",
+    "rejected",
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,6 +105,7 @@ def make_train(
     env_params: EnvParams | None = None,
     shard_envs: Callable[[jnp.ndarray], jnp.ndarray] | None = None,
     scenario_params: EnvParams | None = None,
+    kpi_metrics: tuple[str, ...] = DEFAULT_KPI_METRICS,
 ) -> Callable[[jax.Array], dict]:
     """Build the full jitted training function: key -> {runner_state, metrics}.
 
@@ -139,9 +154,12 @@ def make_train(
 
     # the wrapper stack owns ALL env batching: a flat (num_envs,) vmap, or
     # the nested scenario×env layout when scenario_params is given; AutoReset
-    # restarts finished episodes inside step
+    # restarts finished episodes inside step; LogWrapper (outermost, so its
+    # running totals survive restarts) carries episode accounting and the
+    # in-jit KPI accumulator.  reward/done/obs pass through LogWrapper
+    # unchanged, so training math is bit-identical with KPIs on or off.
     venv = VmapWrapper(env, config.num_envs, num_scenarios=n_scen)
-    wenv = AutoReset(venv)
+    wenv = LogWrapper(AutoReset(venv), metrics=tuple(kpi_metrics))
 
     def policy(params, obs):
         return networks.apply_actor_critic(params, obs, n_heads, n_actions)
@@ -236,14 +254,22 @@ def make_train(
             return (params, opt_state, traj, gae, targets, key), metrics
 
         def update_step(runner: RunnerState, _):
-            runner, traj = jax.lax.scan(env_step, runner, None, config.rollout_steps)
+            acc_before = runner.env_state.metrics
+            with annotate("ppo/rollout"):
+                runner, traj = jax.lax.scan(
+                    env_step, runner, None, config.rollout_steps
+                )
             params, opt_state, env_state, obs, key, upd = runner
-            last_val = policy(params, obs).value
-            gae, targets = compute_gae(traj, last_val)
+            with annotate("ppo/gae"):
+                last_val = policy(params, obs).value
+                gae, targets = compute_gae(traj, last_val)
 
-            carry = (params, opt_state, traj, gae, targets, key)
-            carry, metrics = jax.lax.scan(update_epoch, carry, None, config.update_epochs)
-            params, opt_state, _, _, _, key = carry
+            with annotate("ppo/update"):
+                carry = (params, opt_state, traj, gae, targets, key)
+                carry, metrics = jax.lax.scan(
+                    update_epoch, carry, None, config.update_epochs
+                )
+                params, opt_state, _, _, _, key = carry
 
             mean_ep_reward = traj.reward.sum(axis=0).mean() / config.reward_scale
             mean_profit = traj.info["profit"].mean() * env.config.episode_steps
@@ -255,7 +281,19 @@ def make_train(
                 "rejected": traj.info["rejected"].mean(),
                 "loss": metrics["loss"].mean(),
                 "entropy": metrics["entropy"].mean(),
+                # LogWrapper episode accounting: last finished episode per env
+                "episode_return": env_state.returned_episode_return.mean(),
+                "episode_length": env_state.returned_episode_length.astype(
+                    jnp.float32
+                ).mean(),
             }
+            if acc_before is not None:
+                # this update's KPI window: batch-mean per-env-step rates from
+                # the on-device accumulator (still traced — no host sync)
+                delta = env_state.metrics.since(acc_before)
+                steps = jnp.maximum(delta.count.mean(), 1.0)
+                for n, s in delta.sums.items():
+                    out_metrics[f"kpi/{n}"] = s.mean() / steps
             return RunnerState(params, opt_state, env_state, obs, key, upd + 1), out_metrics
 
         runner = RunnerState(params, opt_state, env_state, obs, key, jnp.int32(0))

@@ -52,7 +52,11 @@ def test_wrappers_preserve_identity_and_spaces():
 
 def test_catalog_one_jit_entry_through_wrapper_stack():
     """Acceptance: every registered scenario steps through the FULL wrapper
-    stack (AutoReset -> LogWrapper -> VmapWrapper) with one compilation."""
+    stack (AutoReset -> LogWrapper -> VmapWrapper) with one compilation —
+    enforced by the recompile sentinel, which names the offending function
+    and avals if a scenario swap ever recompiles."""
+    from repro.obs import cache_entries, compile_guard
+
     env = ChargaxEnv(EnvConfig())
     wenv = VmapWrapper(LogWrapper(AutoReset(env)), 2)
     step = jax.jit(wenv.step)
@@ -61,13 +65,13 @@ def test_catalog_one_jit_entry_through_wrapper_stack():
 
     obs, state = wenv.reset(jax.random.key(0), all_params[0])
     action = wenv.sample_action(jax.random.key(1))
-    ts = step(jax.random.key(2), state, action, all_params[0])
-    n_compiled = step._cache_size()
-    assert n_compiled == 1
-    for p in all_params[1:]:
-        ts = step(jax.random.key(2), state, action, p)
-        assert np.isfinite(float(np.asarray(ts.reward).sum()))
-    assert step._cache_size() == n_compiled  # pure array swaps, no recompile
+    ts = step(jax.random.key(2), state, action, all_params[0])  # the one compile
+    assert cache_entries(step) == 1
+    with compile_guard(f"{len(all_params)}-scenario catalog"):
+        for p in all_params[1:]:
+            ts = step(jax.random.key(2), state, action, p)
+            assert np.isfinite(float(np.asarray(ts.reward).sum()))
+    assert cache_entries(step) == 1  # pure array swaps, no recompile
 
 
 def test_fleet_adapter_conforms():

@@ -1,0 +1,118 @@
+"""Recompile sentinel: clean regions pass, injected recompiles are caught
+with the offending function name + avals in the error."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.obs import RecompileError, cache_entries, compile_guard
+from repro.obs.guard import assert_one_compiled_step
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_clean_region_passes():
+    @jax.jit
+    def f(x):
+        return x * 2.0
+
+    # inputs built OUTSIDE the guard: jnp.full/ones are themselves jitted
+    # helpers whose first-use compiles the sentinel would (correctly) flag
+    xs = [jnp.full(8, float(i)) for i in range(3)]
+    f(xs[0])  # warm-up compile outside the guard
+    with compile_guard("cached calls") as g:
+        for x in xs:
+            f(x)
+    assert g.count == 0
+
+
+def test_shape_polymorphic_recompile_is_caught():
+    @jax.jit
+    def poly(x):
+        return x.sum()
+
+    x4, x5 = jnp.ones(4), jnp.ones(5)
+    poly(x4)
+    with pytest.raises(RecompileError) as ei:
+        with compile_guard("shape leak"):
+            poly(x5)  # new shape -> new cache entry
+    msg = str(ei.value)
+    assert "shape leak" in msg
+    assert "poly" in msg  # offending function is named
+    assert "float32[5]" in msg  # ...with the triggering avals
+    assert len(ei.value.events) == 1
+
+
+def test_allowance_and_collect_only_modes():
+    @jax.jit
+    def g(x):
+        return x + 1
+
+    x = jnp.ones(3)
+    with compile_guard("first call may compile", max_compiles=1):
+        g(x)
+
+    @jax.jit
+    def h(x):
+        return x - 1
+
+    with compile_guard("collect", raise_on_violation=False) as guard:
+        h(x)
+    assert guard.count == 1
+    assert guard.events[0].avals  # avals captured for diagnostics
+
+
+def test_allow_filter_ignores_named_functions():
+    @jax.jit
+    def ignored_helper(x):
+        return x * 3
+
+    x = jnp.ones(2)
+    with compile_guard("allow-list", allow=("ignored_helper",)) as g:
+        ignored_helper(x)
+    assert g.count == 0
+
+
+def test_cache_entries_counts_jit_cache():
+    @jax.jit
+    def f(x):
+        return x * x
+
+    f(jnp.ones(2))
+    f(jnp.ones(2))
+    assert cache_entries(f) == 1
+    f(jnp.ones(3))
+    assert cache_entries(f) == 2
+    with pytest.raises(TypeError):
+        cache_entries(lambda x: x)  # not a jitted callable
+
+
+def test_assert_one_compiled_step_over_scenarios():
+    from repro import scenarios
+    from repro.core import ChargaxEnv, EnvConfig
+
+    env = ChargaxEnv(EnvConfig(episode_hours=1.0))
+    params = [
+        scenarios.make(n).make_params(env)
+        for n in ("shopping_flat", "shopping_pv_tou", "highway_demand_charge")
+    ]
+    assert assert_one_compiled_step(env, params) == 3
+
+
+def test_assert_one_compiled_step_rejects_shape_change():
+    from repro.core import ChargaxEnv, EnvConfig
+
+    import dataclasses
+
+    env = ChargaxEnv(EnvConfig(episode_hours=1.0))
+    good = env.default_params
+    # inject a shape-polymorphic params pytree: the price table with twice
+    # the days — traces fine (the day axis is indexed dynamically) but is a
+    # different static signature, so the swap MUST recompile
+    bad = dataclasses.replace(
+        good,
+        price_buy_table=jnp.concatenate(
+            [good.price_buy_table, good.price_buy_table], axis=0
+        ),
+    )
+    with pytest.raises(RecompileError):
+        assert_one_compiled_step(env, [good, bad])

@@ -1,0 +1,94 @@
+"""Unified sinks: JSONL round-trip, manifest provenance, BENCH JSON schema."""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.obs import (
+    SCHEMA_VERSION,
+    MetricsWriter,
+    emit_json_line,
+    run_manifest,
+    write_benchmark_json,
+)
+from repro.obs.sinks import read_jsonl, to_jsonable
+
+
+def test_run_manifest_provenance_fields():
+    m = run_manifest(run="test", extra_field=7)
+    for key in (
+        "schema_version",
+        "git_sha",
+        "jax_version",
+        "backend",
+        "device_count",
+        "process_count",
+        "unix_time",
+    ):
+        assert key in m, key
+    assert m["schema_version"] == SCHEMA_VERSION
+    assert m["run"] == "test" and m["extra_field"] == 7
+    assert len(m["git_sha"]) == 40  # a real sha inside the checkout
+
+
+def test_metrics_writer_jsonl_round_trip(tmp_path):
+    path = str(tmp_path / "nested" / "metrics.jsonl")  # dirs auto-created
+    with MetricsWriter(path, run="unit") as w:
+        w.write({"profit": jnp.float32(1.5), "arr": np.arange(3)})
+        w.write({"tag": "x"}, kind="eval")
+    records = read_jsonl(path)
+    assert [r["kind"] for r in records] == ["manifest", "metrics", "eval"]
+    assert records[0]["run"] == "unit"
+    assert records[1]["profit"] == 1.5  # jax scalar -> plain float
+    assert records[1]["arr"] == [0, 1, 2]  # numpy array -> list
+    assert all(r["schema_version"] == SCHEMA_VERSION for r in records)
+
+
+def test_metrics_writer_rejects_writes_after_close(tmp_path):
+    w = MetricsWriter(str(tmp_path / "m.jsonl"))
+    w.close()
+    with pytest.raises(ValueError):
+        w.write({"x": 1})
+
+
+def test_write_benchmark_json_schema(tmp_path):
+    rows = [("row_a", 1.23456, "10 steps/s"), ("row_b", np.float64(2.0), "")]
+    path = write_benchmark_json(
+        "unit",
+        rows,
+        summary={"steps_per_sec": 10.0, "benchmark": "liar"},  # provenance wins
+        quick=True,
+        root=str(tmp_path),
+    )
+    assert path.endswith("BENCH_unit.json")
+    rec = json.load(open(path))
+    assert rec["schema_version"] == SCHEMA_VERSION
+    assert rec["benchmark"] == "unit"  # manifest overrode the summary key
+    assert rec["steps_per_sec"] == 10.0  # summary fields stay top-level
+    assert rec["quick"] is True
+    assert rec["rows"][0] == {
+        "name": "row_a",
+        "us_per_call": 1.235,
+        "derived": "10 steps/s",
+    }
+
+
+def test_emit_json_line_is_parseable(capsys):
+    line = emit_json_line("TEST_JSON", {"v": jnp.float32(3.0), "n": [1, 2]})
+    printed = capsys.readouterr().out.strip()
+    assert printed == line
+    tag, payload = printed.split(" ", 1)
+    assert tag == "TEST_JSON"
+    assert json.loads(payload) == {"v": 3.0, "n": [1, 2]}
+
+
+def test_to_jsonable_covers_nested_structures():
+    obj = {
+        "a": np.int64(3),
+        "b": [np.float32(1.5), (jnp.ones(2),)],
+        "c": {"d": np.bool_(True)},
+    }
+    out = to_jsonable(obj)
+    assert out == {"a": 3, "b": [1.5, [[1.0, 1.0]]], "c": {"d": True}}
+    json.dumps(out)  # fully serialisable
