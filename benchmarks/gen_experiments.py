@@ -80,9 +80,14 @@ def roofline_summary() -> str:
 
 
 def perf_iters_summary() -> str:
-    if not os.path.exists("results/perf_iters.json"):
+    if os.path.exists("results/perf_iters.jsonl"):
+        from repro.obs import read_jsonl
+
+        rows = [r for r in read_jsonl("results/perf_iters.jsonl") if r.get("kind") == "perf_iter"]
+    elif os.path.exists("results/perf_iters.json"):  # legacy pre-sink format
+        rows = json.load(open("results/perf_iters.json"))
+    else:
         return "### §Perf-hillclimb\n\n(pending)"
-    rows = json.load(open("results/perf_iters.json"))
     out = [
         "### §Perf-hillclimb\n",
         "| cell | tag | mb | remat | compute | memory | collective | bound | frac |",

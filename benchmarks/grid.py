@@ -1,0 +1,183 @@
+"""Grid benchmark: feeder-envelope coupling cost + grid_aware vs max-charge.
+
+Three claims, persisted to ``BENCH_grid.json`` by ``benchmarks.run``:
+
+  1. **Throughput**: the allocate stage (table lookup + proportional
+     curtailment) is essentially free — steps/sec for the jitted vmapped env
+     on a grid-capped scenario vs the flat baseline scenario.
+  2. **Coupled fleet**: the shared-feeder FleetEnv step (vmapped request ->
+     fleet curtailment -> vmapped deliver) also holds its throughput.
+  3. **Violation/profit**: on ``grid_tight_transformer``, the ``grid_aware``
+     curtailment baseline holds ``grid/violation == 0`` while the paper's
+     always-max baseline overshoots every busy step (and pays the penalty in
+     reward).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import scenarios
+from repro.core import ChargaxEnv, EnvConfig, FleetEnv
+from repro.envs import VmapWrapper
+from repro.rl.baselines import grid_aware_policy, max_charge_policy
+
+LAST_SUMMARY: dict = {}
+
+TIGHT_SCENARIO = "grid_tight_transformer"
+
+
+def _env_steps_per_sec(scenario: str, num_envs: int, steps: int) -> float:
+    env = ChargaxEnv(EnvConfig())
+    params = scenarios.make(scenario).make_params(env)
+    venv = VmapWrapper(env, num_envs)
+
+    @jax.jit
+    def rollout(key):
+        obs, state = venv.reset(key, params)
+
+        def body(carry, _):
+            state, key = carry
+            key, k_act, k_step = jax.random.split(key, 3)
+            ts = venv.step(k_step, state, venv.sample_action(k_act), params)
+            return (ts.state, key), ts.reward
+
+        (state, _), rewards = jax.lax.scan(body, (state, key), None, steps)
+        return rewards.sum()
+
+    rollout(jax.random.key(0)).block_until_ready()  # compile
+    t0 = time.perf_counter()
+    rollout(jax.random.key(1)).block_until_ready()
+    return num_envs * steps / (time.perf_counter() - t0)
+
+
+def _fleet_steps_per_sec(couple_grid: bool, steps: int) -> float:
+    sc = scenarios.make(TIGHT_SCENARIO)
+    fleet = FleetEnv(
+        ["paper_16", "deep_4x4", "paper_16", "mixed_8_8"],
+        scenarios=[sc] * 4,
+        couple_grid=couple_grid,
+    )
+    params = fleet.default_params
+
+    @jax.jit
+    def rollout(key):
+        obs, state = fleet.reset(key, params)
+
+        def body(carry, k):
+            state = carry
+            action = fleet.sample_action(jax.random.fold_in(k, 1))
+            obs, state, reward, done, info = fleet.step(k, state, action, params)
+            return state, reward
+
+        keys = jax.random.split(key, steps)
+        state, rewards = jax.lax.scan(body, state, keys)
+        return rewards.sum()
+
+    rollout(jax.random.key(0)).block_until_ready()
+    t0 = time.perf_counter()
+    rollout(jax.random.key(1)).block_until_ready()
+    return fleet.n_stations * steps / (time.perf_counter() - t0)
+
+
+def _episode_kpis(env, params, action) -> dict:
+    """One constant-action episode; sum grid violations, mean profit/reward."""
+
+    @jax.jit
+    def run(key):
+        obs, state = env.reset(key, params)
+
+        def body(carry, k):
+            obs, state = carry
+            ts = env.step(k, state, action, params)
+            return (ts.obs, ts.state), (
+                ts.info["grid/violation"],
+                ts.info["profit"],
+                ts.reward,
+            )
+
+        keys = jax.random.split(jax.random.key(1), env.config.episode_steps)
+        (_, state), (viol, profit, reward) = jax.lax.scan(body, (obs, state), keys)
+        return viol, profit, reward
+
+    viol, profit, reward = run(jax.random.key(0))
+    return {
+        "violation_kw_max": float(jnp.max(viol)),
+        "violation_kw_sum": float(jnp.sum(viol)),
+        "profit": float(jnp.sum(profit)),
+        "reward": float(jnp.sum(reward)),
+    }
+
+
+def run(quick: bool = True) -> list[tuple[str, float, str]]:
+    global LAST_SUMMARY
+    rows = []
+
+    # --- 1. allocate-stage throughput cost --------------------------------
+    num_envs, steps = (64, 288) if quick else (512, 1024)
+    sps_flat = _env_steps_per_sec("shopping_flat", num_envs, steps)
+    sps_grid = _env_steps_per_sec(TIGHT_SCENARIO, num_envs, steps)
+    rows.append(("grid_steps_flat", 1e6 / sps_flat, f"steps_per_sec={sps_flat:,.0f}"))
+    rows.append(
+        (
+            "grid_steps_capped",
+            1e6 / sps_grid,
+            f"steps_per_sec={sps_grid:,.0f} ratio_vs_flat={sps_grid/sps_flat:.2f}",
+        )
+    )
+
+    # --- 2. coupled-fleet step cost ---------------------------------------
+    fsteps = 288 if quick else 1024
+    sps_un = _fleet_steps_per_sec(False, fsteps)
+    sps_cp = _fleet_steps_per_sec(True, fsteps)
+    rows.append(
+        (
+            "grid_fleet_coupled",
+            1e6 / sps_cp,
+            f"steps_per_sec={sps_cp:,.0f} ratio_vs_uncoupled={sps_cp/sps_un:.2f}",
+        )
+    )
+
+    # --- 3. grid_aware baseline vs always-max on the tight transformer ----
+    env = ChargaxEnv(EnvConfig())
+    params = scenarios.make(TIGHT_SCENARIO).make_params(env)
+    obs0, _ = env.reset(jax.random.key(0), params)
+    kpis = {}
+    for name, make in {
+        "grid_aware": lambda: grid_aware_policy(env, params),
+        "max_charge": lambda: max_charge_policy(env),
+    }.items():
+        action = make()(None, jax.random.key(2), obs0)
+        kpis[name] = _episode_kpis(env, params, action)
+    ga, mx = kpis["grid_aware"], kpis["max_charge"]
+    for name, k in kpis.items():
+        rows.append(
+            (
+                f"grid_violation_{name}",
+                k["violation_kw_max"],
+                f"viol_sum_kw={k['violation_kw_sum']:.0f} "
+                f"profit={k['profit']:.0f} reward={k['reward']:.0f}",
+            )
+        )
+
+    LAST_SUMMARY = {
+        "steps_per_sec_flat": round(sps_flat),
+        "steps_per_sec_grid_capped": round(sps_grid),
+        "fleet_steps_per_sec_uncoupled": round(sps_un),
+        "fleet_steps_per_sec_coupled": round(sps_cp),
+        "tight_scenario": TIGHT_SCENARIO,
+        "violation_kw_max_grid_aware": ga["violation_kw_max"],
+        "violation_kw_max_max_charge": mx["violation_kw_max"],
+        "violation_zero_grid_aware": bool(ga["violation_kw_max"] == 0.0),
+        "reward_grid_aware": round(ga["reward"], 2),
+        "reward_max_charge": round(mx["reward"], 2),
+        "grid_aware_beats_max_on_reward": bool(ga["reward"] > mx["reward"]),
+    }
+    return rows
+
+
+if __name__ == "__main__":
+    for name, v, d in run():
+        print(f"{name},{v:.3f},{d}")

@@ -3,7 +3,10 @@
     PYTHONPATH=src python -m benchmarks.perf_iter --arch tinyllama-1.1b \
         --shape train_4k --microbatches 2 [--no-remat] [--tag hypothesis-3]
 
-Appends records to results/perf_iters.json so the iteration log survives.
+Appends ``kind="perf_iter"`` records to results/perf_iters.jsonl through the
+shared observability sink (``repro.obs.MetricsWriter``) — same
+manifest-then-records schema as ``rl_train --metrics-out`` and
+``benchmarks.run --metrics-out``, so one reader serves every artifact.
 (Must run in a fresh process: the 512-device forcing happens at import.)
 """
 import os
@@ -25,7 +28,7 @@ def main():
     ap.add_argument("--router-group", type=int, default=None)
     ap.add_argument("--capacity-factor", type=float, default=None)
     ap.add_argument("--tag", default="")
-    ap.add_argument("--out", default="results/perf_iters.json")
+    ap.add_argument("--out", default="results/perf_iters.jsonl")
     args = ap.parse_args()
 
     from repro.analysis.roofline import analyze_cell
@@ -57,12 +60,10 @@ def main():
         "useful_compute_ratio", "roofline_fraction_compute", "useful_fraction",
     )}, indent=1))
 
-    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
-    hist = []
-    if os.path.exists(args.out):
-        hist = json.load(open(args.out))
-    hist.append(rec)
-    json.dump(hist, open(args.out, "w"), indent=1)
+    from repro.obs import MetricsWriter
+
+    with MetricsWriter(args.out, run="perf_iter") as w:
+        w.write(rec, kind="perf_iter")
 
 
 if __name__ == "__main__":

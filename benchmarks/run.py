@@ -37,6 +37,10 @@ MODULES = {
         "benchmarks.v2g",
         "V2G: allow_v2g throughput + mixed-scenario PPO profit vs baselines",
     ),
+    "grid": (
+        "benchmarks.grid",
+        "Grid: feeder-envelope allocate cost + grid_aware vs max-charge violations",
+    ),
     "roofline": ("benchmarks.roofline_report", "dry-run + roofline tables"),
 }
 

@@ -22,21 +22,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import datasets, station
-from repro.core.rewards import compute_reward, step_energies
+from repro.core import datasets, station, transition
 from repro.core.state import EnvParams, EnvState, RewardWeights
-from repro.core.transition import (
-    apply_actions,
-    arrive_cars,
-    charge_cars,
-    charge_rate,
-    decode_action,
-    depart_cars,
-)
+from repro.core.transition import GRID_CAP_UNLIMITED, AllocationResult
 from repro.envs import spaces
 from repro.envs.base import Environment, TimeStep
 from repro.obs import annotate
-from repro.utils import replace, steps_per_day
+from repro.utils import steps_per_day
 
 
 @dataclasses.dataclass(frozen=True)
@@ -169,6 +161,14 @@ class ChargaxEnv(Environment):
             pv_kw_table=jnp.zeros(
                 (datasets.DAYS_PER_YEAR, cfg.steps_per_day), jnp.float32
             ),
+            grid_cap_kw_table=jnp.full(
+                (datasets.DAYS_PER_YEAR, cfg.steps_per_day),
+                GRID_CAP_UNLIMITED,
+                jnp.float32,
+            ),
+            grid_setpoint_kw_table=jnp.zeros(
+                (datasets.DAYS_PER_YEAR, cfg.steps_per_day), jnp.float32
+            ),
             car_probs=jnp.asarray(cars[:, 0]),
             car_capacity=jnp.asarray(cars[:, 1]),
             car_ac_kw=jnp.asarray(cars[:, 2]),
@@ -275,120 +275,92 @@ class ChargaxEnv(Environment):
         action: jnp.ndarray,
         params: EnvParams | None = None,
     ) -> TimeStep:
+        """One transition = pure composition of the staged pipeline
+        (:mod:`repro.core.transition`)::
+
+            decode -> request -> allocate -> deliver -> depart_arrive
+                   -> settle -> advance_time -> observe
+
+        The ``request_stage`` / ``allocate`` / ``finish_step`` seams are
+        public so :class:`repro.core.fleet.FleetEnv` can interpose a shared
+        feeder-cap curtailment between the vmapped halves.
+        """
+        params = params if params is not None else self.default_params
+        applied = self.request_stage(state, action, params)
+        with annotate("env/allocate"):
+            alloc = transition.allocate(params, state, applied)
+        return self.finish_step(key, state, alloc, params)
+
+    def request_stage(
+        self,
+        state: EnvState,
+        action: jnp.ndarray,
+        params: EnvParams | None = None,
+    ) -> transition.AppliedActions:
+        """Pipeline stages decode + request: action -> constrained currents."""
+        params = params if params is not None else self.default_params
+        cfg = self.config
+        with annotate("env/decode"):
+            tgt_evse, tgt_batt = transition.decode(
+                params,
+                state,
+                action,
+                discretization=cfg.discretization,
+                allow_v2g=cfg.allow_v2g,
+                action_mode=cfg.action_mode,
+            )
+        with annotate("env/apply_actions"):
+            return transition.request(params, state, tgt_evse, tgt_batt, cfg.dt_hours)
+
+    def finish_step(
+        self,
+        key: jax.Array,
+        state: EnvState,
+        alloc: AllocationResult,
+        params: EnvParams | None = None,
+    ) -> TimeStep:
+        """Pipeline stages deliver -> depart_arrive -> settle -> advance_time
+        -> observe, from an :class:`AllocationResult` (``state`` is the
+        pre-step state the allocation was computed against)."""
         params = params if params is not None else self.default_params
         cfg = self.config
         dt = cfg.dt_hours
-
-        # -- decode action ------------------------------------------------
-        with annotate("env/decode"):
-            if cfg.action_mode == "direct":
-                tgt_evse, tgt_batt = decode_action(
-                    action,
-                    cfg.discretization,
-                    cfg.allow_v2g,
-                    params.evse_max_current,
-                    params.batt_max_current,
-                    v2g_mask=params.evse_v2g_mask,
-                )
-            elif cfg.action_mode == "delta":  # paper's additive form
-                d_evse, d_batt = decode_action(
-                    action,
-                    cfg.discretization,
-                    True,  # deltas may be negative even without v2g...
-                    params.evse_max_current,
-                    params.batt_max_current,
-                )
-                tgt_evse = state.evse_current + d_evse
-                if not cfg.allow_v2g:
-                    tgt_evse = jnp.maximum(tgt_evse, 0.0)  # ...but targets may not
-                else:  # charge-only hardware never targets negative amps
-                    tgt_evse = jnp.where(
-                        params.evse_v2g_mask > 0.5, tgt_evse, jnp.maximum(tgt_evse, 0.0)
-                    )
-                tgt_batt = state.batt_current + d_batt
-            else:
-                raise ValueError(f"unknown action_mode {cfg.action_mode!r}")
-
-        # -- 4-stage transition (paper App. A.2) ---------------------------
-        with annotate("env/apply_actions"):
-            applied = apply_actions(params, state, tgt_evse, tgt_batt, dt)
         with annotate("env/charge_cars"):
-            charged = charge_cars(params, state, applied, dt)
+            charged = transition.deliver(params, state, alloc.applied, dt)
         with annotate("env/depart_arrive"):
-            departed = depart_cars(charged.state)
-            key, k_arr = jax.random.split(key)
-            arrived = arrive_cars(params, departed.state, k_arr)
-
-        # -- reward ---------------------------------------------------------
+            moved = transition.depart_arrive(params, charged.state, key)
         with annotate("env/reward"):
-            spd = state.price_buy.shape[0]
-            e_pv = (
-                params.pv_kw_table[
-                    jnp.mod(state.day, params.pv_kw_table.shape[0]),
-                    jnp.mod(state.t, spd),
-                ]
-                * dt
-            )
-            energies = step_energies(
-                params, charged.e_car, charged.e_batt_net, e_pv, charged.e_repaid
-            )
-            p_buy = state.price_buy[jnp.mod(state.t, spd)]
-            reward, pi, pen = compute_reward(
-                params,
-                energies,
-                p_buy,
-                applied.constraint_excess,
-                departed.missing_kwh,
-                departed.overtime_steps,
-                departed.early_steps,
-                arrived.n_rejected,
-                charged.e_car,
-                state.t,
-                state.price_buy,
-                dt,
-            )
-
-        # -- calendar rollover: at midnight advance the day (mod table length)
-        # and reload the price row, so multi-day episodes see day-1+ prices,
-        # PV, arrival-day-scale and the weekday feature instead of replaying
-        # day 0 forever
-        t_next = state.t + 1
-        n_days = params.price_buy_table.shape[0]
-        midnight = jnp.mod(t_next, spd) == 0
-        day_next = jnp.where(midnight, jnp.mod(state.day + 1, n_days), state.day)
-        price_next = jnp.where(
-            midnight, params.price_buy_table[day_next], state.price_buy
-        )
-        new_state = replace(
-            arrived.state,
-            t=t_next,
-            day=day_next,
-            price_buy=price_next,
-            profit_cum=state.profit_cum + pi,
-        )
+            settled = transition.settle(params, state, alloc, charged, moved, dt)
+        new_state = transition.advance_time(params, moved.state, settled.profit)
         done = new_state.t >= cfg.episode_steps
+        pen = settled.penalties
         info = {
-            "profit": pi,
-            "reward": reward,
-            "e_net": energies.e_net,
-            "e_grid_net": energies.e_grid_net,
-            "e_pv": energies.e_pv,
+            "profit": settled.profit,
+            "reward": settled.reward,
+            "e_net": settled.energies.e_net,
+            "e_grid_net": settled.energies.e_grid_net,
+            "e_pv": settled.energies.e_pv,
             "constraint_excess": pen.constraint,
             "missing_kwh": pen.satisfaction_time,
-            "overtime_steps": departed.overtime_steps,
+            "overtime_steps": moved.overtime_steps,
             "rejected": pen.rejected,
-            "arrived": arrived.n_arrived.astype(jnp.float32),
-            "price_buy": p_buy,
+            "arrived": moved.n_arrived.astype(jnp.float32),
+            "price_buy": settled.p_buy,
             # per-step KPI scalars for the obs metrics accumulators (unused
             # outputs are DCE'd by XLA, so consumers that ignore them pay
             # nothing): kWh into / out of cars this step, open V2G debt
             "energy_delivered": jnp.sum(jnp.maximum(charged.e_car, 0.0)),
             "energy_discharged": jnp.sum(jnp.maximum(-charged.e_car, 0.0)),
             "v2g_debt": jnp.sum(new_state.v2g_debt),
+            # grid-coupling KPIs (kW): station draw vs the feeder envelope
+            "grid/power_drawn": alloc.power_kw,
+            "grid/cap": alloc.cap_kw,
+            "grid/violation": alloc.violation_kw,
+            "grid/setpoint_dev": settled.setpoint_dev_kw,
         }
         with annotate("env/observe"):
             obs = self.observe(new_state, params)
-        return TimeStep(obs, new_state, reward, done, info)
+        return TimeStep(obs, new_state, settled.reward, done, info)
 
     # ------------------------------------------------------------------
     # Observation
@@ -396,57 +368,21 @@ class ChargaxEnv(Environment):
     def observe(self, state: EnvState, params: EnvParams) -> jnp.ndarray:
         cfg = self.config
         spd = cfg.steps_per_day
-        imax = params.evse_max_current
-        port_feats = jnp.stack(
-            [
-                state.occupied,
-                state.evse_current / imax,
-                state.soc,
-                state.e_remain / jnp.maximum(state.cap, 1.0),
-                # V2G debt: how much of the remaining request is energy the
-                # station borrowed (repaid at p_v2g_comp, not billed) — the
-                # agent needs this to price discharge decisions correctly
-                state.v2g_debt / jnp.maximum(state.cap, 1.0),
-                jnp.clip(state.t_remain.astype(jnp.float32) / spd, -1.0, 1.0),
-                state.rhat / imax,
-                state.user_type,
-            ],
-            axis=-1,
-        ).reshape(-1)
-        batt_feats = jnp.stack(
-            [state.batt_soc, state.batt_current / jnp.maximum(params.batt_max_current, 1.0)]
+        return transition.observe(
+            params,
+            state,
+            steps_per_day=spd,
+            horizon_steps=max(int(cfg.obs_price_horizon_hours * spd / 24), 1),
+            near_steps=max(int(spd / 24), 1),
         )
-        tf = state.t.astype(jnp.float32)
-        phase = 2.0 * jnp.pi * tf / spd
-        weekday = ((state.day % 7) < 5).astype(jnp.float32)
-        time_feats = jnp.stack(
-            [jnp.sin(phase), jnp.cos(phase), weekday, state.day.astype(jnp.float32) / 365.0]
-        )
-        idx = jnp.mod(state.t, spd)
-        horizon = max(int(cfg.obs_price_horizon_hours * spd / 24), 1)
-        ahead = state.price_buy[jnp.mod(idx + jnp.arange(horizon), spd)]
-        near = max(int(spd / 24), 1)
-        price_feats = jnp.stack(
-            [state.price_buy[idx], jnp.mean(ahead[:near]), jnp.mean(ahead)]
-        )
-        return jnp.concatenate([port_feats, batt_feats, time_feats, price_feats])
 
 
 def make_baseline_max_action(env: ChargaxEnv):
-    """Paper's baseline as a policy: 'always charge to maximum potential'.
+    """Deprecated alias — moved to :func:`repro.rl.baselines.make_baseline_max_action`.
 
-    Max level on every EVSE head; battery idle (centre level).  Returns a
-    ``policy(params, key, obs) -> action`` callable like every other
-    baseline (``repro.rl.baselines``) — the historical version returned a
-    bare action array, the odd one out.  ``obs``'s leading axes set the
-    batch shape; ``params``/``key`` are ignored (the policy is constant).
+    Policy code does not belong in the physics module; import from
+    ``repro.rl.baselines`` (or use ``BASELINES['max_charge']``).
     """
-    d = env.config.discretization
-    space = env.action_space
-    a = jnp.full(space.shape, 2 * d, dtype=space.dtype)
-    a = a.at[..., -1].set(d)  # battery: 0 amps
+    from repro.rl.baselines import make_baseline_max_action as _impl
 
-    def policy(params, key, obs):
-        return jnp.broadcast_to(a, jnp.shape(obs)[:-1] + a.shape)
-
-    return policy
+    return _impl(env)

@@ -32,7 +32,7 @@ from typing import Any, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core import station
+from repro.core import station, transition
 from repro.core.env import ChargaxEnv, EnvConfig
 from repro.core.state import EnvParams, EnvState, RewardWeights
 from repro.distributed import env_sharding
@@ -58,6 +58,18 @@ class FleetEnv:
             ``repro.scenarios.Scenario``.  Applied as pure array swaps on the
             padded per-station params.
         weights: reward weights shared by the fleet.
+        couple_grid: step the fleet through the staged-pipeline seams with a
+            *shared feeder power envelope*: after the vmapped
+            decode/request/allocate stages, the stations' post-allocation
+            grid draws are summed and proportionally curtailed against the
+            fleet cap — station 0's ``grid_cap_kw_table`` read at station 0's
+            clock (the fleet-level grid axis; give every station the same
+            table via a shared scenario) — before the vmapped deliver/settle
+            stages resume.  Pure array ops between two vmapped halves, so the
+            one-jit-entry invariant survives; with the default unlimited cap
+            the coupled step is bit-identical to the uncoupled vmap.
+            Fleet-excess kW are attributed to stations pro-rata by draw on
+            top of their local ``grid/violation``.
 
     ``reset``/``step`` mirror the single-station API with a leading station
     axis: obs ``(S, obs_dim)``, reward ``(S,)``, action ``(S, heads)``.
@@ -77,6 +89,7 @@ class FleetEnv:
         scenarios: Sequence[Any] | None = None,
         weights: RewardWeights | None = None,
         shard: bool = True,
+        couple_grid: bool = False,
     ):
         if not architectures:
             raise ValueError("fleet needs at least one station")
@@ -107,8 +120,13 @@ class FleetEnv:
         self.config = self.template.config
         self.weights = weights
         self.shard = shard
+        self.couple_grid = couple_grid
         self._v_reset = jax.vmap(self.template.reset, in_axes=(0, 0))
         self._v_step = jax.vmap(self.template.step, in_axes=(0, 0, 0, 0))
+        # staged-pipeline seams for the grid-coupled step
+        self._v_request = jax.vmap(self.template.request_stage, in_axes=(0, 0, 0))
+        self._v_allocate = jax.vmap(transition.allocate, in_axes=(0, 0, 0))
+        self._v_finish = jax.vmap(self.template.finish_step, in_axes=(0, 0, 0, 0))
 
     def _constrain(self, tree):
         """Pin the station axis to the ambient mesh's data axes (no-op when
@@ -197,7 +215,12 @@ class FleetEnv:
     ) -> tuple[jnp.ndarray, EnvState, jnp.ndarray, jnp.ndarray, dict]:
         params = params if params is not None else self.default_params
         keys = jax.random.split(key, self.n_stations)
-        obs, state, reward, done, info = self._v_step(keys, state, action, params)
+        if self.couple_grid:
+            obs, state, reward, done, info = self._coupled_step(
+                keys, state, action, params
+            )
+        else:
+            obs, state, reward, done, info = self._v_step(keys, state, action, params)
         info = dict(info)
         # fleet aggregates broadcast to (S,) so every info leaf has a uniform
         # leading station axis — tree_map stacking under an outer vmap/scan
@@ -208,3 +231,31 @@ class FleetEnv:
             (obs, state, reward, done, info)
         )
         return obs, state, reward, done, info
+
+    def _coupled_step(self, keys, state, action, params):
+        """Grid-coupled step: shared feeder curtailment between the vmapped
+        request/allocate and deliver/settle halves of the staged pipeline."""
+        applied = self._v_request(state, action, params)
+        alloc = self._v_allocate(params, state, applied)  # per-station caps
+        # fleet feeder cap: station 0's grid table at station 0's clock (all
+        # stations share the episode clock; days differ only across resets)
+        cap_table = params.grid_cap_kw_table[0]
+        fleet_cap = cap_table[
+            jnp.mod(state.day[0], cap_table.shape[0]),
+            jnp.mod(state.t[0], cap_table.shape[1]),
+        ]
+        p = alloc.power_kw  # (S,) post-local-allocation draws
+        total = jnp.sum(p)
+        scale = jnp.minimum(1.0, fleet_cap / jnp.maximum(total, 1e-9))
+        fleet_excess = jnp.maximum(total - fleet_cap, 0.0)
+        share = p / jnp.maximum(total, 1e-9)  # pro-rata attribution
+        alloc = transition.AllocationResult(
+            applied=jax.vmap(transition.curtail, in_axes=(0, None))(
+                alloc.applied, scale
+            ),
+            power_req_kw=alloc.power_req_kw,
+            power_kw=p * scale,
+            cap_kw=jnp.minimum(alloc.cap_kw, fleet_cap),
+            violation_kw=alloc.violation_kw + fleet_excess * share,
+        )
+        return self._v_finish(keys, state, alloc, params)

@@ -24,6 +24,8 @@ class RewardWeights:
     degradation: jnp.ndarray | float = 0.0  # battery + car discharge wear
     grid_stability: jnp.ndarray | float = 0.0  # |E_net - d_grid|
     early_finish_beta: jnp.ndarray | float = 0.0  # beta inside c_sat,1
+    grid_violation: jnp.ndarray | float = 0.0  # kW of feeder-cap overshoot
+    grid_setpoint: jnp.ndarray | float = 0.0  # |drawn - setpoint| tracking error
 
 
 @pytree_dataclass
@@ -57,6 +59,10 @@ class EnvParams:
     arrival_rate: jnp.ndarray  # (steps_per_day,) expected cars / step
     arrival_day_scale: jnp.ndarray  # (365,) seasonal/weekend arrival modulation
     pv_kw_table: jnp.ndarray  # (365, steps_per_day) on-site PV generation [kW]
+    grid_cap_kw_table: jnp.ndarray  # (365, steps_per_day) feeder power cap [kW]
+    #     (GRID_CAP_UNLIMITED when the scenario declares no grid axis, which
+    #     makes the allocate stage an exact bitwise no-op)
+    grid_setpoint_kw_table: jnp.ndarray  # (365, steps_per_day) DSO setpoint [kW]
     car_probs: jnp.ndarray  # (n_models,) or (365, n_models) under fleet drift
     car_capacity: jnp.ndarray  # (n_models,) kWh
     car_ac_kw: jnp.ndarray  # (n_models,)

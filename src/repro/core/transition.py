@@ -1,18 +1,38 @@
-"""Chargax transition function (paper §4 "Transition Function", Appendix A.2).
+"""Chargax staged transition pipeline (paper §4 "Transition Function", App. A.2).
 
-Four sequential stages, all pure jnp (jit/vmap/scan-able):
+The step is a sequence of individually-jittable pure stages::
 
-  1. apply_actions   — set port/battery currents, clip by car curve & port
-                       limits, enforce the tree constraints of Eq. 5,
-  2. charge          — integrate energy over dt (constant-rate assumption),
-  3. departures      — time-sensitive (u=0) leave at deadline, charge-
-                       sensitive (u=1) leave when the request is met,
-  4. arrivals        — Poisson arrivals, first-come-first-served onto the
-                       first free ports, profiles sampled from bundled data.
+    decode -> request -> allocate -> deliver -> depart_arrive -> settle
+           -> advance_time -> observe
 
-The per-stage functions are exposed separately because the fused Pallas kernel
-(`repro/kernels/chargax_step`) implements stages 1-2 and must match them
-bit-for-bit in the interpret-mode tests.
+  decode        — map the discrete factorized action to target amps
+                  (direct and the paper's additive/delta form),
+  request       — clip targets by car curve, port limits and pack headroom,
+                  then enforce the Eq. 5 tree constraints (``apply_actions``),
+  allocate      — curtail the station's *grid-side* charging power against
+                  the feeder/transformer envelope (``grid_cap_kw_table``);
+                  with the default unlimited cap this stage is an exact
+                  bitwise no-op, so non-grid scenarios are unchanged,
+  deliver       — integrate energy over dt (``charge_cars``),
+  depart_arrive — deadline / request-met departures, Poisson arrivals,
+  settle        — energy bookkeeping, Eq. 1-3 reward, V2G debt settlement,
+                  plus the grid-axis penalties (cap violation, setpoint
+                  tracking error),
+  advance_time  — clock tick + midnight calendar rollover,
+  observe       — flat observation vector.
+
+``ChargaxEnv.step`` is pure composition of these stages, and the fused
+Pallas oracle (``repro/kernels/chargax_step/ref.py``) calls the *same*
+per-pole physics helpers (``pole_bounds`` / ``pole_clip`` /
+``pole_integrate``) — kernel/core parity is structural, not duplicated.
+The helpers treat the station battery as the paper's (N+1)-th pole: a lane
+with ``eff = eta_b`` and an unbounded energy request (``BIG`` sentinel).
+
+Fleet grid coupling reuses the same seam: ``FleetEnv`` with
+``couple_grid=True`` runs the vmapped ``request`` stage, applies one shared
+proportional ``curtail`` against the fleet feeder cap, and resumes with the
+vmapped ``deliver``-onward stages — all pure array ops, so the one-jit-entry
+invariant over the whole scenario catalog survives.
 """
 from __future__ import annotations
 
@@ -21,8 +41,19 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.rewards import PenaltyTerms, StepEnergies, compute_reward, step_energies
 from repro.core.state import EnvParams, EnvState
 from repro.utils import replace
+
+# Energy-request sentinel for poles with no finite request (the station
+# battery): large enough that the request never binds, small enough that
+# `BIG * 1000 / (V dt)` stays finite in fp32.
+BIG = 1e30
+
+# Default feeder cap [kW]: far above any station's worst-case draw, so the
+# allocate stage lowers to `scale == 1.0` exactly and curtailment is a
+# bitwise no-op (x * 1.0 is exact in IEEE-754).
+GRID_CAP_UNLIMITED = 1e9
 
 
 # ---------------------------------------------------------------------------
@@ -40,14 +71,84 @@ def discharge_rate(soc: jnp.ndarray, rbar: jnp.ndarray, tau: jnp.ndarray) -> jnp
 
 
 # ---------------------------------------------------------------------------
-# Stage 1: apply actions + Eq. 5 constraint enforcement
+# Shared per-pole physics (cars AND the battery pole; also the fused-kernel
+# oracle) — `eff` is the pole's storage efficiency: 1.0 for cars (port losses
+# live in path_eff), eta_b for the battery (charging stores eta*E,
+# discharging drains E/eta).
 # ---------------------------------------------------------------------------
-class AppliedActions(NamedTuple):
-    evse_current: jnp.ndarray  # (N,) post-constraint signed amps
-    batt_current: jnp.ndarray  # ()
-    constraint_excess: jnp.ndarray  # () max pre-rescale node violation [A]
+def pole_bounds(
+    soc: jnp.ndarray,
+    e_remain: jnp.ndarray,
+    cap: jnp.ndarray,
+    rbar: jnp.ndarray,
+    tau: jnp.ndarray,
+    voltage: jnp.ndarray,
+    imax: jnp.ndarray,
+    eff: jnp.ndarray | float,
+    dt_hours: float,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-pole current bounds [A]: (up >= 0 charge limit, down <= 0 discharge).
+
+    Charge is limited by the car curve, the port, the remaining request and
+    the pack headroom; discharge by the flipped curve and the pack content.
+    ``e_remain = BIG`` disables the request bound (battery pole).
+    """
+    rhat_chg = charge_rate(soc, rbar, tau)
+    rhat_dis = discharge_rate(soc, rbar, tau)
+    max_chg_amp_req = e_remain * 1000.0 / jnp.maximum(voltage * dt_hours, 1e-9)
+    max_chg_amp_soc = (
+        (1.0 - soc) * cap * 1000.0 / jnp.maximum(voltage * dt_hours * eff, 1e-9)
+    )
+    max_dis_amp_soc = soc * cap * eff * 1000.0 / jnp.maximum(voltage * dt_hours, 1e-9)
+    up = jnp.minimum(
+        jnp.minimum(rhat_chg, imax),
+        jnp.minimum(max_chg_amp_req, max_chg_amp_soc),
+    )
+    down = -jnp.minimum(jnp.minimum(rhat_dis, imax), max_dis_amp_soc)
+    return up, down
 
 
+def pole_clip(
+    target: jnp.ndarray,
+    up: jnp.ndarray,
+    down: jnp.ndarray,
+    occupied: jnp.ndarray | float,
+) -> jnp.ndarray:
+    """Clip a target current into [down, max(up, 0)]; empty poles draw nothing."""
+    return jnp.clip(target, down, jnp.maximum(up, 0.0)) * occupied
+
+
+def pole_integrate(
+    soc: jnp.ndarray,
+    e_remain: jnp.ndarray,
+    cap: jnp.ndarray,
+    rbar: jnp.ndarray,
+    tau: jnp.ndarray,
+    occupied: jnp.ndarray | float,
+    voltage: jnp.ndarray,
+    current: jnp.ndarray,
+    eff: jnp.ndarray | float,
+    dt_hours: float,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Integrate one pole over dt: (e_kwh, soc', e_remain', rhat').
+
+    The remaining request grows when a pole is discharged (V2G) but never
+    past the pack headroom ``(1 - SoC') * cap`` — an uncapped request would
+    be unfillable energy poisoning the missing_kwh satisfaction penalty.
+    Poles carrying the ``BIG`` request sentinel (battery) keep it.
+    """
+    e = voltage * current * dt_hours / 1000.0  # kWh, pole-side
+    soc_delta = jnp.where(e >= 0, e * eff, e / eff)
+    soc_new = jnp.clip(soc + soc_delta / jnp.maximum(cap, 1e-6), 0.0, 1.0)
+    headroom = jnp.where(e_remain >= 0.5 * BIG, BIG, (1.0 - soc_new) * cap)
+    e_remain_new = jnp.minimum(jnp.maximum(e_remain - e, 0.0), headroom)
+    rhat_new = charge_rate(soc_new, rbar, tau) * occupied
+    return e, soc_new, e_remain_new, rhat_new
+
+
+# ---------------------------------------------------------------------------
+# Stage: decode — discrete factorized action -> target amps
+# ---------------------------------------------------------------------------
 def decode_action(
     action: jnp.ndarray,
     discretization: int,
@@ -75,6 +176,58 @@ def decode_action(
             v2g_mask > 0.5, port_frac, jnp.maximum(port_frac, 0.0)
         )
     return port_frac * evse_max_current, batt_frac * batt_max_current
+
+
+def decode(
+    params: EnvParams,
+    state: EnvState,
+    action: jnp.ndarray,
+    *,
+    discretization: int,
+    allow_v2g: bool,
+    action_mode: str = "direct",
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Decode stage: both action modes, as target amps (tgt_evse, tgt_batt).
+
+    ``direct`` maps levels straight to amps; ``delta`` (the paper's additive
+    form) maps levels to signed current *changes* applied on top of the
+    currents held last step.
+    """
+    if action_mode == "direct":
+        return decode_action(
+            action,
+            discretization,
+            allow_v2g,
+            params.evse_max_current,
+            params.batt_max_current,
+            v2g_mask=params.evse_v2g_mask,
+        )
+    if action_mode == "delta":
+        d_evse, d_batt = decode_action(
+            action,
+            discretization,
+            True,  # deltas may be negative even without v2g...
+            params.evse_max_current,
+            params.batt_max_current,
+        )
+        tgt_evse = state.evse_current + d_evse
+        if not allow_v2g:
+            tgt_evse = jnp.maximum(tgt_evse, 0.0)  # ...but targets may not
+        else:  # charge-only hardware never targets negative amps
+            tgt_evse = jnp.where(
+                params.evse_v2g_mask > 0.5, tgt_evse, jnp.maximum(tgt_evse, 0.0)
+            )
+        return tgt_evse, state.batt_current + d_batt
+    raise ValueError(f"unknown action_mode {action_mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# Stage: request — apply targets + Eq. 5 constraint enforcement
+# ---------------------------------------------------------------------------
+class AppliedActions(NamedTuple):
+    evse_current: jnp.ndarray  # (N,) post-constraint signed amps
+    batt_current: jnp.ndarray  # ()
+    constraint_excess: jnp.ndarray  # () max pre-rescale node violation [A]
 
 
 def constraint_scale(
@@ -108,44 +261,33 @@ def apply_actions(
     target_batt: jnp.ndarray,  # () requested amps (signed)
     dt_hours: float,
 ) -> AppliedActions:
-    # --- per-port physical clips -------------------------------------------
-    rhat_chg = charge_rate(state.soc, state.rbar, state.tau)
-    rhat_dis = discharge_rate(state.soc, state.rbar, state.tau)
-    # energy-headroom clips: never overshoot the request nor the pack bounds
-    v = params.evse_voltage
-    max_chg_amp_req = state.e_remain * 1000.0 / jnp.maximum(v * dt_hours, 1e-9)
-    max_chg_amp_soc = (
-        (1.0 - state.soc) * state.cap * 1000.0 / jnp.maximum(v * dt_hours, 1e-9)
+    # --- per-port physical clips (shared pole physics; eff=1 for cars) ------
+    up, down = pole_bounds(
+        state.soc,
+        state.e_remain,
+        state.cap,
+        state.rbar,
+        state.tau,
+        params.evse_voltage,
+        params.evse_max_current,
+        1.0,
+        dt_hours,
     )
-    max_dis_amp_soc = state.soc * state.cap * 1000.0 / jnp.maximum(v * dt_hours, 1e-9)
+    i_evse = pole_clip(target_evse, up, down, state.occupied)
 
-    up = jnp.minimum(
-        jnp.minimum(rhat_chg, params.evse_max_current),
-        jnp.minimum(max_chg_amp_req, max_chg_amp_soc),
+    # --- battery clips: the (N+1)-th pole, eff=eta_b, unbounded request -----
+    b_up, b_down = pole_bounds(
+        state.batt_soc,
+        jnp.float32(BIG),
+        params.batt_capacity,
+        params.batt_max_current,
+        params.batt_tau,
+        params.batt_voltage,
+        params.batt_max_current,
+        params.batt_eff,
+        dt_hours,
     )
-    down = -jnp.minimum(jnp.minimum(rhat_dis, params.evse_max_current), max_dis_amp_soc)
-    i_evse = jnp.clip(target_evse, down, jnp.maximum(up, 0.0))
-    i_evse = i_evse * state.occupied  # empty ports draw nothing
-
-    # --- battery clips ------------------------------------------------------
-    bv = params.batt_voltage
-    b_chg = charge_rate(state.batt_soc, params.batt_max_current, params.batt_tau)
-    b_dis = discharge_rate(state.batt_soc, params.batt_max_current, params.batt_tau)
-    # efficiency: charging stores eta*E, discharging drains E/eta
-    b_up_soc = (
-        (1.0 - state.batt_soc)
-        * params.batt_capacity
-        * 1000.0
-        / jnp.maximum(bv * dt_hours * params.batt_eff, 1e-9)
-    )
-    b_dn_soc = (
-        state.batt_soc
-        * params.batt_capacity
-        * params.batt_eff
-        * 1000.0
-        / jnp.maximum(bv * dt_hours, 1e-9)
-    )
-    i_batt = jnp.clip(target_batt, -jnp.minimum(b_dis, b_dn_soc), jnp.minimum(b_chg, b_up_soc))
+    i_batt = pole_clip(target_batt, b_up, b_down, 1.0)
 
     # --- Eq. 5 tree constraints (battery = extra leaf on the root) ----------
     leaf_currents = jnp.concatenate([i_evse, i_batt[None]])
@@ -154,8 +296,90 @@ def apply_actions(
     return AppliedActions(leaf_currents[:-1], leaf_currents[-1], excess)
 
 
+# `request` is the stage name in the pipeline; `apply_actions` the historical
+# one — both resolve to the same function.
+request = apply_actions
+
+
 # ---------------------------------------------------------------------------
-# Stage 2: charge stationed cars (constant rate over dt)
+# Stage: allocate — grid power envelope (feeder/transformer coupling)
+# ---------------------------------------------------------------------------
+class AllocationResult(NamedTuple):
+    applied: AppliedActions  # post-curtailment currents
+    power_req_kw: jnp.ndarray  # () gross grid-side charging power requested
+    power_kw: jnp.ndarray  # () post-curtailment grid draw
+    cap_kw: jnp.ndarray  # () feeder cap in force this step
+    violation_kw: jnp.ndarray  # () max(requested - cap, 0): the pre-curtail
+    #     overshoot — the penalty the RL agent can drive to 0 by requesting
+    #     less, and exactly the power the allocate stage had to shed
+
+
+def requested_power_kw(params: EnvParams, applied: AppliedActions) -> jnp.ndarray:
+    """Gross grid-side charging power [kW] of one station's applied currents.
+
+    Conservative cable/transformer reading: charging draws count at the grid
+    side (inflated by the port path efficiency); discharge (V2G / battery)
+    does not offset them — a feeder is certified for gross draw, and netting
+    would let simultaneous charge+discharge hide load behind the cap.
+    """
+    p_evse = jnp.sum(
+        params.evse_voltage
+        * jnp.maximum(applied.evse_current, 0.0)
+        / params.evse_path_eff
+    )
+    p_batt = params.batt_voltage * jnp.maximum(applied.batt_current, 0.0)
+    return (p_evse + p_batt) / 1000.0
+
+
+def grid_cap_kw(params: EnvParams, state: EnvState) -> jnp.ndarray:
+    """Feeder power cap [kW] in force at the state's (day, step)."""
+    table = params.grid_cap_kw_table
+    return table[jnp.mod(state.day, table.shape[0]), jnp.mod(state.t, table.shape[1])]
+
+
+def curtail(applied: AppliedActions, scale: jnp.ndarray) -> AppliedActions:
+    """Scale all *charging* currents by ``scale`` (discharge untouched).
+
+    Scaling charging magnitudes down can only lower every Eq. 5 node load,
+    so constrained currents stay feasible; ``scale == 1.0`` is a bitwise
+    no-op (x * 1.0 is exact).
+    """
+    i_evse = jnp.where(
+        applied.evse_current > 0.0, applied.evse_current * scale, applied.evse_current
+    )
+    i_batt = jnp.where(
+        applied.batt_current > 0.0, applied.batt_current * scale, applied.batt_current
+    )
+    return AppliedActions(i_evse, i_batt, applied.constraint_excess)
+
+
+def allocate(
+    params: EnvParams,
+    state: EnvState,
+    applied: AppliedActions,
+    cap_kw: jnp.ndarray | None = None,
+) -> AllocationResult:
+    """Proportionally curtail charging against the feeder power envelope.
+
+    ``cap_kw`` overrides the per-station table lookup (the fleet coupled
+    step passes the shared feeder cap).  With the default
+    ``GRID_CAP_UNLIMITED`` table the scale is exactly 1.0 and the applied
+    currents pass through bit-identically.
+    """
+    cap = grid_cap_kw(params, state) if cap_kw is None else cap_kw
+    p_req = requested_power_kw(params, applied)
+    scale = jnp.minimum(1.0, cap / jnp.maximum(p_req, 1e-9))
+    return AllocationResult(
+        applied=curtail(applied, scale),
+        power_req_kw=p_req,
+        power_kw=jnp.minimum(p_req, cap),
+        cap_kw=cap,
+        violation_kw=jnp.maximum(p_req - cap, 0.0),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Stage: deliver — charge stationed cars (constant rate over dt)
 # ---------------------------------------------------------------------------
 class ChargeResult(NamedTuple):
     state: EnvState
@@ -168,15 +392,18 @@ class ChargeResult(NamedTuple):
 def charge_cars(
     params: EnvParams, state: EnvState, applied: AppliedActions, dt_hours: float
 ) -> ChargeResult:
-    e_car = params.evse_voltage * applied.evse_current * dt_hours / 1000.0  # kWh
-    soc = jnp.clip(state.soc + e_car / jnp.maximum(state.cap, 1e-6), 0.0, 1.0)
-    # remaining request grows when a car is discharged (V2G) but never past
-    # the pack headroom (1 - SoC) * cap — an uncapped request would be
-    # unfillable energy poisoning the missing_kwh satisfaction penalty
-    e_remain = jnp.minimum(
-        jnp.maximum(state.e_remain - e_car, 0.0), (1.0 - soc) * state.cap
+    e_car, soc, e_remain, rhat = pole_integrate(
+        state.soc,
+        state.e_remain,
+        state.cap,
+        state.rbar,
+        state.tau,
+        state.occupied,
+        params.evse_voltage,
+        applied.evse_current,
+        1.0,
+        dt_hours,
     )
-    rhat = charge_rate(soc, state.rbar, state.tau) * state.occupied
     # deadlines tick only on occupied ports; padded/idle lanes hold at 0
     # instead of drifting negative without bound
     t_remain = jnp.where(state.occupied > 0.5, state.t_remain - 1, state.t_remain)
@@ -188,14 +415,18 @@ def charge_cars(
     e_repaid = jnp.minimum(jnp.maximum(e_car, 0.0), state.v2g_debt)
     v2g_debt = state.v2g_debt - e_repaid + jnp.maximum(-e_car, 0.0)
 
-    # battery: store eta*E when charging, deliver E*eta grid-side when discharging
-    e_b = params.batt_voltage * applied.batt_current * dt_hours / 1000.0
-    batt_soc = jnp.clip(
-        state.batt_soc
-        + jnp.where(e_b >= 0, e_b * params.batt_eff, e_b / params.batt_eff)
-        / jnp.maximum(params.batt_capacity, 1e-6),
-        0.0,
+    # battery pole: store eta*E charging, deliver E*eta grid-side discharging
+    e_b, batt_soc, _, _ = pole_integrate(
+        state.batt_soc,
+        jnp.float32(BIG),
+        params.batt_capacity,
+        params.batt_max_current,
+        params.batt_tau,
         1.0,
+        params.batt_voltage,
+        applied.batt_current,
+        params.batt_eff,
+        dt_hours,
     )
 
     new_state = replace(
@@ -215,8 +446,11 @@ def charge_cars(
     return ChargeResult(new_state, e_car, e_b, e_repaid)
 
 
+deliver = charge_cars
+
+
 # ---------------------------------------------------------------------------
-# Stage 3: departures
+# Stage: depart_arrive
 # ---------------------------------------------------------------------------
 class DepartResult(NamedTuple):
     state: EnvState
@@ -260,9 +494,6 @@ def depart_cars(state: EnvState) -> DepartResult:
     return DepartResult(new_state, missing, over, early)
 
 
-# ---------------------------------------------------------------------------
-# Stage 4: arrivals
-# ---------------------------------------------------------------------------
 class ArriveResult(NamedTuple):
     state: EnvState
     n_arrived: jnp.ndarray  # ()
@@ -351,3 +582,167 @@ def arrive_cars(params: EnvParams, state: EnvState, key: jax.Array) -> ArriveRes
         cars_rejected=state.cars_rejected + n_reject.astype(jnp.float32),
     )
     return ArriveResult(new_state, n_arrive, n_reject)
+
+
+class DepartArriveResult(NamedTuple):
+    state: EnvState
+    missing_kwh: jnp.ndarray  # ()
+    overtime_steps: jnp.ndarray  # ()
+    early_steps: jnp.ndarray  # ()
+    n_arrived: jnp.ndarray  # ()
+    n_rejected: jnp.ndarray  # ()
+
+
+def depart_arrive(
+    params: EnvParams, state: EnvState, key: jax.Array
+) -> DepartArriveResult:
+    """Departures then arrivals, splitting the step key for the Poisson draw."""
+    departed = depart_cars(state)
+    key, k_arr = jax.random.split(key)
+    arrived = arrive_cars(params, departed.state, k_arr)
+    return DepartArriveResult(
+        arrived.state,
+        departed.missing_kwh,
+        departed.overtime_steps,
+        departed.early_steps,
+        arrived.n_arrived,
+        arrived.n_rejected,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Stage: settle — energies, Eq. 1-3 reward, grid-axis penalties
+# ---------------------------------------------------------------------------
+class SettleResult(NamedTuple):
+    reward: jnp.ndarray  # () Eq. 3 reward incl. grid penalties
+    profit: jnp.ndarray  # () Eq. 2 profit
+    energies: StepEnergies
+    penalties: PenaltyTerms
+    p_buy: jnp.ndarray  # () buy price this step
+    setpoint_kw: jnp.ndarray  # () DSO setpoint in force
+    setpoint_dev_kw: jnp.ndarray  # () |power_drawn - setpoint|
+
+
+def settle(
+    params: EnvParams,
+    state: EnvState,  # the PRE-step state (this step's clock / price row)
+    alloc: AllocationResult,
+    charged: ChargeResult,
+    moved: DepartArriveResult,
+    dt_hours: float,
+) -> SettleResult:
+    """Reward settlement for one step.
+
+    The base Eq. 1-3 algebra is untouched; the grid axis adds two linear
+    penalty terms on top — ``grid_violation`` (kW the request overshot the
+    feeder cap, before curtailment) and ``grid_setpoint`` (absolute tracking
+    error against the DSO setpoint).  Both weights default to 0.0, making
+    the additions exact bitwise no-ops for non-grid scenarios.
+    """
+    spd = state.price_buy.shape[0]
+    e_pv = (
+        params.pv_kw_table[
+            jnp.mod(state.day, params.pv_kw_table.shape[0]),
+            jnp.mod(state.t, spd),
+        ]
+        * dt_hours
+    )
+    energies = step_energies(
+        params, charged.e_car, charged.e_batt_net, e_pv, charged.e_repaid
+    )
+    p_buy = state.price_buy[jnp.mod(state.t, spd)]
+    reward, pi, pen = compute_reward(
+        params,
+        energies,
+        p_buy,
+        alloc.applied.constraint_excess,
+        moved.missing_kwh,
+        moved.overtime_steps,
+        moved.early_steps,
+        moved.n_rejected,
+        charged.e_car,
+        state.t,
+        state.price_buy,
+        dt_hours,
+    )
+    sp_table = params.grid_setpoint_kw_table
+    setpoint = sp_table[
+        jnp.mod(state.day, sp_table.shape[0]), jnp.mod(state.t, sp_table.shape[1])
+    ]
+    setpoint_dev = jnp.abs(alloc.power_kw - setpoint)
+    w = params.weights
+    reward = (
+        reward - w.grid_violation * alloc.violation_kw - w.grid_setpoint * setpoint_dev
+    )
+    return SettleResult(reward, pi, energies, pen, p_buy, setpoint, setpoint_dev)
+
+
+# ---------------------------------------------------------------------------
+# Stage: advance_time — clock tick + midnight calendar rollover
+# ---------------------------------------------------------------------------
+def advance_time(params: EnvParams, state: EnvState, profit: jnp.ndarray) -> EnvState:
+    """At midnight advance the day (mod table length) and reload the price
+    row, so multi-day episodes see day-1+ prices, PV, arrival-day-scale and
+    the weekday feature instead of replaying day 0 forever."""
+    spd = state.price_buy.shape[0]
+    t_next = state.t + 1
+    n_days = params.price_buy_table.shape[0]
+    midnight = jnp.mod(t_next, spd) == 0
+    day_next = jnp.where(midnight, jnp.mod(state.day + 1, n_days), state.day)
+    price_next = jnp.where(
+        midnight, params.price_buy_table[day_next], state.price_buy
+    )
+    return replace(
+        state,
+        t=t_next,
+        day=day_next,
+        price_buy=price_next,
+        profit_cum=state.profit_cum + profit,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Stage: observe
+# ---------------------------------------------------------------------------
+def observe(
+    params: EnvParams,
+    state: EnvState,
+    *,
+    steps_per_day: int,
+    horizon_steps: int,
+    near_steps: int,
+) -> jnp.ndarray:
+    """Flat float32 observation (see ``ChargaxEnv.observation_space``)."""
+    spd = steps_per_day
+    imax = params.evse_max_current
+    port_feats = jnp.stack(
+        [
+            state.occupied,
+            state.evse_current / imax,
+            state.soc,
+            state.e_remain / jnp.maximum(state.cap, 1.0),
+            # V2G debt: how much of the remaining request is energy the
+            # station borrowed (repaid at p_v2g_comp, not billed) — the
+            # agent needs this to price discharge decisions correctly
+            state.v2g_debt / jnp.maximum(state.cap, 1.0),
+            jnp.clip(state.t_remain.astype(jnp.float32) / spd, -1.0, 1.0),
+            state.rhat / imax,
+            state.user_type,
+        ],
+        axis=-1,
+    ).reshape(-1)
+    batt_feats = jnp.stack(
+        [state.batt_soc, state.batt_current / jnp.maximum(params.batt_max_current, 1.0)]
+    )
+    tf = state.t.astype(jnp.float32)
+    phase = 2.0 * jnp.pi * tf / spd
+    weekday = ((state.day % 7) < 5).astype(jnp.float32)
+    time_feats = jnp.stack(
+        [jnp.sin(phase), jnp.cos(phase), weekday, state.day.astype(jnp.float32) / 365.0]
+    )
+    idx = jnp.mod(state.t, spd)
+    ahead = state.price_buy[jnp.mod(idx + jnp.arange(horizon_steps), spd)]
+    price_feats = jnp.stack(
+        [state.price_buy[idx], jnp.mean(ahead[:near_steps]), jnp.mean(ahead)]
+    )
+    return jnp.concatenate([port_feats, batt_feats, time_feats, price_feats])

@@ -29,8 +29,7 @@ def _chargax_kernel(
     # static params
     voltage_ref,  # (8, P) — row 0 real, sublane-padded
     imax_ref,  # (8, P)
-    eff_in_ref,  # (8, P)
-    eff_out_ref,  # (8, P)
+    eff_ref,  # (8, P) storage efficiency (1 cars, eta_b battery)
     member_t_ref,  # (P, Nn)  — transposed membership for the MXU
     node_budget_ref,  # (8, Nn)
     # outputs, (B_blk, P) unless noted
@@ -42,8 +41,7 @@ def _chargax_kernel(
 ):
     v = voltage_ref[0, :]
     imax = imax_ref[0, :]
-    eff_in = eff_in_ref[0, :]
-    eff_out = eff_out_ref[0, :]
+    eff = eff_ref[0, :]
     budget = node_budget_ref[0, :]
 
     soc = soc_ref[...]
@@ -62,12 +60,12 @@ def _chargax_kernel(
         jnp.minimum(rhat_chg, imax),
         jnp.minimum(
             e_remain * amp_per_kwh,
-            (1.0 - soc) * cap * amp_per_kwh / jnp.maximum(eff_in, 1e-9),
+            (1.0 - soc) * cap * amp_per_kwh / jnp.maximum(eff, 1e-9),
         ),
     )
     down = -jnp.minimum(
         jnp.minimum(rhat_dis, imax),
-        soc * cap * amp_per_kwh / jnp.maximum(eff_out, 1e-9),
+        soc * cap * eff * amp_per_kwh,
     )
     i = jnp.clip(target_ref[...], down, jnp.maximum(up, 0.0)) * occ
 
@@ -87,7 +85,7 @@ def _chargax_kernel(
 
     # --- charge epilogue ------------------------------------------------------
     e = v * i * dt_hours / 1000.0
-    soc_delta = jnp.where(e >= 0, e * eff_in, e * eff_out)
+    soc_delta = jnp.where(e >= 0, e * eff, e / jnp.maximum(eff, 1e-9))
     soc_new = jnp.clip(soc + soc_delta / jnp.maximum(cap, 1e-6), 0.0, 1.0)
     headroom = jnp.where(e_remain >= 0.5 * BIG, BIG, (1.0 - soc_new) * cap)
     e_rem_new = jnp.minimum(jnp.maximum(e_remain - e, 0.0), headroom)
@@ -103,14 +101,14 @@ def _chargax_kernel(
 
 def chargax_fused_step(
     slabs_arrays: tuple[jnp.ndarray, ...],  # 7 x (B, P) in PoleSlabs order
-    params_arrays: tuple[jnp.ndarray, ...],  # voltage/imax/eff_in/eff_out (8,P), member_t (P,Nn), budget (8,Nn)
+    params_arrays: tuple[jnp.ndarray, ...],  # voltage/imax/eff (8,P), member_t (P,Nn), budget (8,Nn)
     *,
     dt_hours: float,
     block_envs: int = 256,
     interpret: bool = False,
 ):
     b, p = slabs_arrays[0].shape
-    member_t = params_arrays[4]
+    member_t = params_arrays[3]
     nn = member_t.shape[1]
     assert b % block_envs == 0, (b, block_envs)
 
@@ -126,7 +124,7 @@ def chargax_fused_step(
         kernel,
         grid=grid,
         in_specs=[state_spec] * 7
-        + [param_spec_row] * 4
+        + [param_spec_row] * 3
         + [
             pl.BlockSpec((p, nn), lambda e: (0, 0)),
             pl.BlockSpec((8, nn), lambda e: (0, 0)),

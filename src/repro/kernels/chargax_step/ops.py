@@ -33,16 +33,13 @@ def build_pole_params(params: EnvParams, n_pad: int | None = None) -> PoleParams
     voltage = _pad_lanes(jnp.append(params.evse_voltage, params.batt_voltage), p, 1.0)
     imax = _pad_lanes(jnp.append(params.evse_max_current, params.batt_max_current), p)
     ones = jnp.ones((n,), jnp.float32)
-    eff_in = _pad_lanes(jnp.append(ones, params.batt_eff), p, 1.0)
-    eff_out = _pad_lanes(
-        jnp.append(ones, 1.0 / jnp.maximum(params.batt_eff, 1e-6)), p, 1.0
-    )
+    eff = _pad_lanes(jnp.append(ones, params.batt_eff), p, 1.0)
 
     nn_real, n_leaf = params.member.shape  # member already has the battery col
     nn = (nn_real + 7) // 8 * 8
     member = jnp.zeros((nn, p), jnp.float32).at[:nn_real, : n + 1].set(params.member)
     budget = jnp.full((nn,), BIG, jnp.float32).at[:nn_real].set(params.node_budget)
-    return PoleParams(voltage, imax, eff_in, eff_out, member, budget)
+    return PoleParams(voltage, imax, eff, member, budget)
 
 
 def build_slabs(
@@ -111,7 +108,7 @@ def fused_step(
         return jnp.broadcast_to(x, (8,) + x.shape)
 
     param_arrays = (
-        sub(pp.voltage), sub(pp.imax), sub(pp.eff_in), sub(pp.eff_out),
+        sub(pp.voltage), sub(pp.imax), sub(pp.eff),
         pp.member.T, sub(pp.node_budget),
     )
     outs = chargax_fused_step(

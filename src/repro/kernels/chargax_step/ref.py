@@ -1,15 +1,19 @@
 """Pure-jnp oracle for the fused Chargax station step (stages 1-2 of App. A.2).
 
 Operates on a *unified pole representation*: the station battery is pole
-index ``n_evse`` (the paper's "(N+1)-th charging pole"), with per-pole
-asymmetric SoC-efficiency vectors:
+index ``n_evse`` (the paper's "(N+1)-th charging pole"), with a per-pole
+storage efficiency vector:
 
-    cars:    eff_in = eff_out = 1          (port losses live in path_eff)
-    battery: eff_in = eta_b, eff_out = 1/eta_b
+    cars:    eff = 1                       (port losses live in path_eff)
+    battery: eff = eta_b                   (store eta*E, drain E/eta)
 
-so one elementwise pipeline serves every pole.  ``poles_from_env`` builds the
-padded slabs from core env structures; ``fused_step_ref`` is the oracle the
-Pallas kernel must match bit-for-bit (same op order, fp32).
+so one elementwise pipeline serves every pole.  The per-pole physics IS the
+core staged pipeline's — :func:`repro.core.transition.pole_bounds` /
+``pole_clip`` / ``pole_integrate`` are called directly, so kernel/core
+parity is structural rather than a hand-kept duplicate; only the Eq. 5 tree
+constraint is re-expressed here in its batched matmul form (the shape the
+Pallas kernel's MXU pass mirrors).  ``fused_step_ref`` is the oracle the
+Pallas kernel must match within fp32 op-reorder tolerance.
 """
 from __future__ import annotations
 
@@ -17,7 +21,22 @@ from typing import NamedTuple
 
 import jax.numpy as jnp
 
-BIG = 1e30
+from repro.core.transition import (
+    BIG,
+    charge_rate,
+    pole_bounds,
+    pole_clip,
+    pole_integrate,
+)
+
+__all__ = [
+    "BIG",
+    "PoleSlabs",
+    "PoleParams",
+    "FusedOut",
+    "charge_rate",
+    "fused_step_ref",
+]
 
 
 class PoleSlabs(NamedTuple):
@@ -37,8 +56,7 @@ class PoleParams(NamedTuple):
 
     voltage: jnp.ndarray  # (P,)
     imax: jnp.ndarray  # (P,)
-    eff_in: jnp.ndarray  # (P,)
-    eff_out: jnp.ndarray  # (P,)
+    eff: jnp.ndarray  # (P,) storage efficiency: 1 for cars, eta_b battery
     member: jnp.ndarray  # (Nn, P) 0/1
     node_budget: jnp.ndarray  # (Nn,)  BIG on padding rows
 
@@ -52,31 +70,23 @@ class FusedOut(NamedTuple):
     excess: jnp.ndarray  # (...,) max node violation pre-rescale [A]
 
 
-def charge_rate(soc, rbar, tau):
-    return jnp.where(soc <= tau, rbar, rbar * (1.0 - soc) / jnp.maximum(1.0 - tau, 1e-6))
-
-
 def fused_step_ref(slabs: PoleSlabs, pp: PoleParams, dt_hours: float) -> FusedOut:
-    v = pp.voltage
-    amp_per_kwh = 1000.0 / jnp.maximum(v * dt_hours, 1e-9)  # (P,)
-
-    rhat_chg = charge_rate(slabs.soc, slabs.rbar, slabs.tau)
-    rhat_dis = charge_rate(1.0 - slabs.soc, slabs.rbar, slabs.tau)
-
-    up = jnp.minimum(
-        jnp.minimum(rhat_chg, pp.imax),
-        jnp.minimum(
-            slabs.e_remain * amp_per_kwh,
-            (1.0 - slabs.soc) * slabs.cap * amp_per_kwh / jnp.maximum(pp.eff_in, 1e-9),
-        ),
+    # --- per-pole clips: the core pipeline's shared physics -----------------
+    up, down = pole_bounds(
+        slabs.soc,
+        slabs.e_remain,
+        slabs.cap,
+        slabs.rbar,
+        slabs.tau,
+        pp.voltage,
+        pp.imax,
+        pp.eff,
+        dt_hours,
     )
-    down = -jnp.minimum(
-        jnp.minimum(rhat_dis, pp.imax),
-        slabs.soc * slabs.cap * amp_per_kwh / jnp.maximum(pp.eff_out, 1e-9),
-    )
-    i = jnp.clip(slabs.target, down, jnp.maximum(up, 0.0)) * slabs.occupied
+    i = pole_clip(slabs.target, up, down, slabs.occupied)
 
-    # --- Eq. 5 tree constraints --------------------------------------------
+    # --- Eq. 5 tree constraints (batched matmul form of the core's
+    # constraint_scale; the Pallas kernel mirrors this MXU shape) ------------
     load = jnp.abs(i) @ pp.member.T  # (..., Nn)
     s_node = jnp.minimum(1.0, pp.node_budget / jnp.maximum(load, 1e-9))
     excess = jnp.max(jnp.maximum(load - pp.node_budget, 0.0), axis=-1)
@@ -87,15 +97,17 @@ def fused_step_ref(slabs: PoleSlabs, pp: PoleParams, dt_hours: float) -> FusedOu
         )
     i = i * scale
 
-    # --- charge over dt ------------------------------------------------------
-    e = v * i * dt_hours / 1000.0  # kWh, pole-side
-    soc_delta = jnp.where(e >= 0, e * pp.eff_in, e * pp.eff_out)
-    soc = jnp.clip(slabs.soc + soc_delta / jnp.maximum(slabs.cap, 1e-6), 0.0, 1.0)
-    # car lanes: requests grown by discharge clamp at pack headroom (matches
-    # core charge_cars); the battery pole (e_remain sentinel BIG) stays BIG
-    headroom = jnp.where(
-        slabs.e_remain >= 0.5 * BIG, BIG, (1.0 - soc) * slabs.cap
+    # --- charge over dt (shared integrator) ---------------------------------
+    e, soc, e_remain, rhat = pole_integrate(
+        slabs.soc,
+        slabs.e_remain,
+        slabs.cap,
+        slabs.rbar,
+        slabs.tau,
+        slabs.occupied,
+        pp.voltage,
+        i,
+        pp.eff,
+        dt_hours,
     )
-    e_remain = jnp.minimum(jnp.maximum(slabs.e_remain - e, 0.0), headroom)
-    rhat = charge_rate(soc, slabs.rbar, slabs.tau) * slabs.occupied
     return FusedOut(i, soc, e_remain, rhat, e, excess)

@@ -47,6 +47,7 @@ from repro.obs.sinks import (
     SCHEMA_VERSION,
     MetricsWriter,
     emit_json_line,
+    read_jsonl,
     run_manifest,
     write_benchmark_json,
 )
@@ -72,6 +73,7 @@ __all__ = [
     "emit_json_line",
     "enable_trace_annotations",
     "latest_trace",
+    "read_jsonl",
     "run_manifest",
     "trace_annotations_enabled",
     "trace_session",

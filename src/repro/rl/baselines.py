@@ -10,15 +10,35 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.env import make_baseline_max_action
 from repro.core.state import EnvParams
 from repro.envs import Environment
 
 
+def make_baseline_max_action(env: Environment):
+    """Paper's baseline as a policy: 'always charge to maximum potential'.
+
+    Max level on every EVSE head; battery idle (centre level).  Returns a
+    ``policy(params, key, obs) -> action`` callable like every other
+    baseline — the historical version returned a bare action array, the odd
+    one out.  ``obs``'s leading axes set the batch shape; ``params``/``key``
+    are ignored (the policy is constant).  (Moved here from
+    ``repro.core.env``, which keeps a deprecation alias.)
+    """
+    d = env.config.discretization
+    space = env.action_space
+    a = jnp.full(space.shape, 2 * d, dtype=space.dtype)
+    a = a.at[..., -1].set(d)  # battery: 0 amps
+
+    def policy(params, key, obs):
+        return jnp.broadcast_to(a, jnp.shape(obs)[:-1] + a.shape)
+
+    return policy
+
+
 def max_charge_policy(env: Environment):
-    """Paper's baseline: max level at every EVSE, battery idle (the policy
-    form of :func:`repro.core.env.make_baseline_max_action`)."""
+    """Paper's baseline: max level at every EVSE, battery idle."""
     return make_baseline_max_action(env)
 
 
@@ -99,9 +119,48 @@ def v2g_arbitrage_policy(
     return policy
 
 
+def grid_aware_policy(env: Environment, env_params: EnvParams | None = None):
+    """Curtailment baseline for grid-coupled scenarios: never overshoot the cap.
+
+    Derates every port's charge level so the station's *worst-case gross
+    grid draw* (all real ports at the derated level, grid-side, i.e. inflated
+    by path efficiency) fits under the scenario's tightest feeder cap
+    ``min(grid_cap_kw_table)``.  The battery stays idle (it only adds draw).
+    All thresholds are factory-time Python floats, so the policy itself is a
+    constant broadcast — jit/vmap/scan-transparent like ``max_charge``, and
+    ``grid/violation == 0`` by construction: actual draw <= worst-case
+    derated draw <= min-cap <= cap(t).  With the default unlimited cap the
+    derate factor is 1 and this degrades to the max-charge baseline.
+    """
+    params = env_params if env_params is not None else env.default_params
+    cap_min = float(np.min(np.asarray(params.grid_cap_kw_table)))
+    p_max = float(
+        np.sum(
+            np.asarray(params.evse_voltage)
+            * np.asarray(params.evse_max_current)
+            * np.asarray(params.evse_mask)
+            / np.asarray(params.evse_path_eff)
+        )
+        / 1000.0
+    )
+    frac = min(1.0, cap_min / max(p_max, 1e-9))
+    d = env.config.discretization
+    space = env.action_space
+    # floor: the discrete level just UNDER the continuous derate fraction
+    port_level = d + int(np.floor(d * frac))
+    a = jnp.full(space.shape, port_level, dtype=space.dtype)
+    a = a.at[..., -1].set(d)  # battery: 0 amps
+
+    def policy(params, key, obs):
+        return jnp.broadcast_to(a, jnp.shape(obs)[:-1] + a.shape)
+
+    return policy
+
+
 BASELINES = {
     "max_charge": max_charge_policy,
     "random": random_policy,
     "price_threshold": price_threshold_policy,
     "v2g_arbitrage": v2g_arbitrage_policy,
+    "grid_aware": grid_aware_policy,
 }

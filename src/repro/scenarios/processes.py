@@ -152,6 +152,92 @@ def seasonal_arrival_scale(
 
 
 # ---------------------------------------------------------------------------
+# Grid feeder power envelope, shape (365, steps_per_day), kW
+# ---------------------------------------------------------------------------
+def grid_cap_table(
+    cap_kw: float,
+    dt_minutes: float = 5.0,
+    profile: str = "flat",
+    dr_events_per_day: float = 0.0,
+    dr_depth: float = 0.5,
+    dr_hours: float = 2.0,
+    seed: int = 7,
+) -> np.ndarray:
+    """Feeder/transformer power cap in kW for every (day, step) of a year.
+
+    ``profile``: 'flat' (constant ``cap_kw``) or 'evening_droop' (the cap
+    drops ~40% during the 17-21h residential peak, with the same 0.5h ramps
+    as the ToU overlay — the DSO reserves headroom for household load).
+
+    Demand-response events: per day, ``Poisson(dr_events_per_day)`` events
+    start at uniform steps and multiply the cap by ``dr_depth`` for
+    ``dr_hours`` (wrapping past midnight within the day's row).  Seeded —
+    the same arguments always yield the same table.
+
+        >>> cap = grid_cap_table(400.0, dt_minutes=60.0)
+        >>> cap.shape
+        (365, 24)
+        >>> float(cap.min()) == float(cap.max()) == 400.0   # flat, no events
+        True
+        >>> dr = grid_cap_table(400.0, 60.0, dr_events_per_day=2.0, dr_depth=0.5)
+        >>> bool((dr < 400.0).any()) and bool(dr.min() > 0.0)  # events tighten
+        True
+        >>> droop = grid_cap_table(400.0, 60.0, profile="evening_droop")
+        >>> bool(droop[0, 19] < droop[0, 3])   # evening cap below night cap
+        True
+    """
+    spd = steps_per_day(dt_minutes)
+    if cap_kw <= 0.0:
+        raise ValueError(f"cap_kw must be > 0, got {cap_kw}")
+    h = np.arange(spd) * (24.0 / spd)
+    mult = np.ones(spd)
+    if profile == "evening_droop":
+        ramp = 0.5  # hours
+        up = np.clip((h - 17.0) / ramp, 0.0, 1.0)
+        down = np.clip((21.0 - h) / ramp, 0.0, 1.0)
+        mult -= 0.4 * np.minimum(up, down)
+    elif profile != "flat":
+        raise ValueError(f"unknown grid cap profile {profile!r}")
+    table = np.broadcast_to(cap_kw * mult[None, :], (DAYS_PER_YEAR, spd)).copy()
+
+    if dr_events_per_day > 0.0:
+        rng = np.random.default_rng(seed)
+        dur = max(int(round(dr_hours * spd / 24.0)), 1)
+        for day in range(DAYS_PER_YEAR):
+            for _ in range(rng.poisson(dr_events_per_day)):
+                start = int(rng.integers(0, spd))
+                idx = (start + np.arange(dur)) % spd
+                table[day, idx] *= dr_depth
+    return table.astype(np.float32)
+
+
+def grid_setpoint_table(
+    peak_kw: float,
+    dt_minutes: float = 5.0,
+    window_hours: tuple[float, float] = (10.0, 16.0),
+) -> np.ndarray:
+    """DSO power-setpoint tracking target in kW, shape (365, steps_per_day).
+
+    A half-sine bump peaking mid-window (default 10-16h: soak up midday
+    solar), zero outside — the 'please draw this much' signal whose absolute
+    tracking error the ``grid_setpoint`` reward weight penalises.
+
+        >>> sp = grid_setpoint_table(400.0, dt_minutes=60.0)
+        >>> sp.shape
+        (365, 24)
+        >>> float(sp[0, 13]) > 350.0 and float(sp[0, 3]) == 0.0
+        True
+    """
+    spd = steps_per_day(dt_minutes)
+    h = np.arange(spd) * (24.0 / spd)
+    lo, hi = window_hours
+    frac = np.clip((h - lo) / max(hi - lo, 1e-9), 0.0, 1.0)
+    inside = (h >= lo) & (h < hi)
+    bump = peak_kw * np.sin(np.pi * frac) * inside
+    return np.broadcast_to(bump[None, :], (DAYS_PER_YEAR, spd)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
 # Fleet-mix drift, shape (365, n_models)
 # ---------------------------------------------------------------------------
 def fleet_drift_table(

@@ -203,6 +203,45 @@ CATALOG = tuple(
             fleet_drift="big_battery_growth",
             fleet_drift_strength=1.5,
         ),
+        # ----- grid pack: feeder power envelopes (allocate-stage coupling) -----
+        # paper_16's worst-case gross draw is ~1650 kW (10 DC x 150 kW + 6 AC
+        # x 11 kW, grid-side), so these caps genuinely bind.
+        Scenario(
+            name="grid_tight_transformer",
+            description="Shopping site behind an undersized 300 kW feeder: "
+            "the allocate stage curtails hard, overshoot is penalised",
+            grid_cap_kw=300.0,
+            grid_violation_weight=5.0,
+        ),
+        Scenario(
+            name="grid_dr_events",
+            description="500 kW feeder hit by ~1.5 demand-response events/day "
+            "that tighten the cap to 40% for two hours",
+            grid_cap_kw=500.0,
+            grid_dr_events_per_day=1.5,
+            grid_dr_depth=0.4,
+            grid_dr_hours=2.0,
+            grid_violation_weight=2.0,
+        ),
+        Scenario(
+            name="grid_setpoint_tracking",
+            description="DSO setpoint tracking: follow a 400 kW midday "
+            "half-sine (solar soak) under an 800 kW feeder",
+            grid_cap_kw=800.0,
+            grid_violation_weight=1.0,
+            grid_setpoint_kw=400.0,
+            grid_setpoint_weight=0.5,
+        ),
+        Scenario(
+            name="grid_evening_droop",
+            description="Residential ToU street where the DSO reserves 40% "
+            "of a 450 kW feeder for household load in the 17-21h peak",
+            profile="residential",
+            tariff="tou",
+            grid_cap_kw=450.0,
+            grid_cap_profile="evening_droop",
+            grid_violation_weight=2.0,
+        ),
     ]
 )
 
@@ -236,4 +275,16 @@ REAL_PACK = (
     "real_nl_2024_shopping_tou",
     "real_es_solar_heavy",
     "real_nl_2024_residential_drift",
+)
+
+# Grid-coupled scenarios: time-varying feeder power envelopes, demand-response
+# events and setpoint tracking, all acting through the allocate stage of the
+# staged transition pipeline.  Same parameter shapes as every other scenario
+# (the cap/setpoint tables are always present, unlimited/zero by default), so
+# adding the pack to a training distribution costs zero recompilation.
+GRID_PACK = (
+    "grid_tight_transformer",
+    "grid_dr_events",
+    "grid_setpoint_tracking",
+    "grid_evening_droop",
 )

@@ -83,6 +83,24 @@ class Scenario:
     v2g_port_fraction: float = 1.0
     # battery/car wear weight lowered into RewardWeights.degradation
     degradation_weight: float = 0.0
+    # --- grid axis: feeder power envelope + demand response + setpoint ---
+    # feeder/transformer cap in kW (None = unlimited: the allocate stage is
+    # an exact no-op); lowered into EnvParams.grid_cap_kw_table
+    grid_cap_kw: float | None = None
+    grid_cap_profile: str = "flat"  # flat | evening_droop
+    # demand-response events: Poisson(events/day) windows multiplying the cap
+    # by dr_depth for dr_hours (processes.grid_cap_table)
+    grid_dr_events_per_day: float = 0.0
+    grid_dr_depth: float = 0.5
+    grid_dr_hours: float = 2.0
+    grid_seed: int = 7
+    # reward weight on kW of pre-curtailment cap overshoot
+    # (RewardWeights.grid_violation; merges like degradation_weight)
+    grid_violation_weight: float = 0.0
+    # DSO setpoint-tracking objective: midday half-sine peaking at
+    # grid_setpoint_kw, |drawn - setpoint| penalised at grid_setpoint_weight
+    grid_setpoint_kw: float = 0.0
+    grid_setpoint_weight: float = 0.0
 
     # ------------------------------------------------------------------
     # Serialisation (registry round-trips, config files)
@@ -126,6 +144,20 @@ class Scenario:
                 base,
                 weights=dataclasses.replace(
                     base.weights, degradation=float(self.degradation_weight)
+                ),
+            )
+        if self.grid_violation_weight and float(base.weights.grid_violation) == 0.0:
+            base = replace(
+                base,
+                weights=dataclasses.replace(
+                    base.weights, grid_violation=float(self.grid_violation_weight)
+                ),
+            )
+        if self.grid_setpoint_weight and float(base.weights.grid_setpoint) == 0.0:
+            base = replace(
+                base,
+                weights=dataclasses.replace(
+                    base.weights, grid_setpoint=float(self.grid_setpoint_weight)
                 ),
             )
 
@@ -195,8 +227,30 @@ class Scenario:
         comp = self.v2g_comp_price
         p_v2g_comp = base.p_sell if comp is None else jnp.float32(comp)
 
+        # grid axis: replace the unlimited-cap / zero-setpoint default tables
+        # only when declared — same shapes either way, so the catalog (grid
+        # and non-grid scenarios mixed) still shares one compiled step
+        grid_tables = {}
+        if self.grid_cap_kw is not None:
+            grid_tables["grid_cap_kw_table"] = jnp.asarray(
+                processes.grid_cap_table(
+                    self.grid_cap_kw,
+                    cfg.dt_minutes,
+                    profile=self.grid_cap_profile,
+                    dr_events_per_day=self.grid_dr_events_per_day,
+                    dr_depth=self.grid_dr_depth,
+                    dr_hours=self.grid_dr_hours,
+                    seed=self.grid_seed,
+                )
+            )
+        if self.grid_setpoint_kw:
+            grid_tables["grid_setpoint_kw_table"] = jnp.asarray(
+                processes.grid_setpoint_table(self.grid_setpoint_kw, cfg.dt_minutes)
+            )
+
         return replace(
             base,
+            **grid_tables,
             price_buy_table=jnp.asarray(prices),
             pv_kw_table=jnp.asarray(pv),
             arrival_day_scale=jnp.asarray(day_scale),

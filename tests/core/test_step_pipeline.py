@@ -1,0 +1,196 @@
+"""Golden bit-identity: the staged pipeline vs the pre-refactor monolithic step.
+
+``_monolithic_step`` below is a verbatim copy of the pre-refactor
+``ChargaxEnv.step`` body (the single inline function this PR decomposed into
+``decode -> request -> allocate -> deliver -> depart_arrive -> settle ->
+advance_time -> observe``).  A jitted multi-step rollout through both must be
+**bit-identical** — obs, full state pytree, reward, done, and every shared
+info scalar — for the direct, delta and V2G configurations.  That is the
+acceptance proof that the refactor (including the unified battery-as-pole
+physics helpers and the inert default allocate stage) changed nothing.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ChargaxEnv, EnvConfig
+from repro.core.rewards import compute_reward, step_energies
+from repro.core.transition import (
+    apply_actions,
+    arrive_cars,
+    charge_cars,
+    decode_action,
+    depart_cars,
+)
+from repro.utils import replace
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _monolithic_step(env, key, state, action, params):
+    """The pre-refactor ChargaxEnv.step body, verbatim (golden reference)."""
+    cfg = env.config
+    dt = cfg.dt_hours
+
+    # -- decode action ------------------------------------------------
+    if cfg.action_mode == "direct":
+        tgt_evse, tgt_batt = decode_action(
+            action,
+            cfg.discretization,
+            cfg.allow_v2g,
+            params.evse_max_current,
+            params.batt_max_current,
+            v2g_mask=params.evse_v2g_mask,
+        )
+    elif cfg.action_mode == "delta":  # paper's additive form
+        d_evse, d_batt = decode_action(
+            action,
+            cfg.discretization,
+            True,  # deltas may be negative even without v2g...
+            params.evse_max_current,
+            params.batt_max_current,
+        )
+        tgt_evse = state.evse_current + d_evse
+        if not cfg.allow_v2g:
+            tgt_evse = jnp.maximum(tgt_evse, 0.0)  # ...but targets may not
+        else:  # charge-only hardware never targets negative amps
+            tgt_evse = jnp.where(
+                params.evse_v2g_mask > 0.5, tgt_evse, jnp.maximum(tgt_evse, 0.0)
+            )
+        tgt_batt = state.batt_current + d_batt
+    else:
+        raise ValueError(f"unknown action_mode {cfg.action_mode!r}")
+
+    # -- 4-stage transition -------------------------------------------
+    applied = apply_actions(params, state, tgt_evse, tgt_batt, dt)
+    charged = charge_cars(params, state, applied, dt)
+    departed = depart_cars(charged.state)
+    key, k_arr = jax.random.split(key)
+    arrived = arrive_cars(params, departed.state, k_arr)
+
+    # -- reward ---------------------------------------------------------
+    spd = state.price_buy.shape[0]
+    e_pv = (
+        params.pv_kw_table[
+            jnp.mod(state.day, params.pv_kw_table.shape[0]),
+            jnp.mod(state.t, spd),
+        ]
+        * dt
+    )
+    energies = step_energies(
+        params, charged.e_car, charged.e_batt_net, e_pv, charged.e_repaid
+    )
+    p_buy = state.price_buy[jnp.mod(state.t, spd)]
+    reward, pi, pen = compute_reward(
+        params,
+        energies,
+        p_buy,
+        applied.constraint_excess,
+        departed.missing_kwh,
+        departed.overtime_steps,
+        departed.early_steps,
+        arrived.n_rejected,
+        charged.e_car,
+        state.t,
+        state.price_buy,
+        dt,
+    )
+
+    # -- calendar rollover -----------------------------------------------
+    t_next = state.t + 1
+    n_days = params.price_buy_table.shape[0]
+    midnight = jnp.mod(t_next, spd) == 0
+    day_next = jnp.where(midnight, jnp.mod(state.day + 1, n_days), state.day)
+    price_next = jnp.where(
+        midnight, params.price_buy_table[day_next], state.price_buy
+    )
+    new_state = replace(
+        arrived.state,
+        t=t_next,
+        day=day_next,
+        price_buy=price_next,
+        profit_cum=state.profit_cum + pi,
+    )
+    done = new_state.t >= cfg.episode_steps
+    info = {
+        "profit": pi,
+        "reward": reward,
+        "e_net": energies.e_net,
+        "e_grid_net": energies.e_grid_net,
+        "e_pv": energies.e_pv,
+        "constraint_excess": pen.constraint,
+        "missing_kwh": pen.satisfaction_time,
+        "overtime_steps": departed.overtime_steps,
+        "rejected": pen.rejected,
+        "arrived": arrived.n_arrived.astype(jnp.float32),
+        "price_buy": p_buy,
+        "energy_delivered": jnp.sum(jnp.maximum(charged.e_car, 0.0)),
+        "energy_discharged": jnp.sum(jnp.maximum(-charged.e_car, 0.0)),
+        "v2g_debt": jnp.sum(new_state.v2g_debt),
+    }
+    obs = env.observe(new_state, params)
+    return obs, new_state, reward, done, info
+
+
+CONFIGS = {
+    "direct": EnvConfig(),
+    "delta": EnvConfig(action_mode="delta"),
+    "v2g": EnvConfig(allow_v2g=True),
+    "delta_v2g_nobatt": EnvConfig(action_mode="delta", allow_v2g=True, battery=False),
+}
+
+
+def _rollout(step_fn, env, params, n_steps=40, seed=0):
+    obs0, state = env.reset(jax.random.key(seed), params)
+
+    @jax.jit
+    def run(state):
+        def body(carry, k):
+            state, _ = carry
+            action = env.sample_action(jax.random.fold_in(k, 1))
+            out = step_fn(k, state, action, params)
+            obs, new_state, reward, done, info = out
+            return (new_state, reward), (obs, reward, done, info)
+
+        keys = jax.random.split(jax.random.key(seed + 100), n_steps)
+        (state_f, _), traj = jax.lax.scan(body, (state, jnp.float32(0.0)), keys)
+        return state_f, traj
+
+    return run(state)
+
+
+@pytest.mark.parametrize("name", sorted(CONFIGS))
+def test_staged_pipeline_bit_identical_to_monolithic_step(name):
+    env = ChargaxEnv(CONFIGS[name])
+    params = env.default_params
+
+    state_new, (obs_n, rew_n, done_n, info_n) = _rollout(env.step, env, params)
+    state_old, (obs_o, rew_o, done_o, info_o) = _rollout(
+        lambda k, s, a, p: _monolithic_step(env, k, s, a, p), env, params
+    )
+
+    np.testing.assert_array_equal(np.asarray(obs_n), np.asarray(obs_o))
+    np.testing.assert_array_equal(np.asarray(rew_n), np.asarray(rew_o))
+    np.testing.assert_array_equal(np.asarray(done_n), np.asarray(done_o))
+    for k in info_o:  # golden info keys; the pipeline adds grid/* on top
+        np.testing.assert_array_equal(
+            np.asarray(info_n[k]), np.asarray(info_o[k]), err_msg=f"info[{k!r}]"
+        )
+    for f, a, b in zip(
+        state_new._fields if hasattr(state_new, "_fields") else [],
+        jax.tree_util.tree_leaves(state_new),
+        jax.tree_util.tree_leaves(state_old),
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=f)
+
+
+def test_pipeline_adds_grid_kpis_to_info():
+    env = ChargaxEnv(EnvConfig())
+    obs, state = env.reset(jax.random.key(0))
+    ts = env.step(jax.random.key(1), state, env.sample_action(jax.random.key(2)))
+    for k in ("grid/power_drawn", "grid/cap", "grid/violation", "grid/setpoint_dev"):
+        assert k in ts.info, k
+    # default params: unlimited cap, nothing curtailed, nothing violated
+    assert float(ts.info["grid/violation"]) == 0.0
+    assert float(ts.info["grid/cap"]) == pytest.approx(1e9)

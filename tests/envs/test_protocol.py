@@ -61,7 +61,8 @@ def test_catalog_one_jit_entry_through_wrapper_stack():
     wenv = VmapWrapper(LogWrapper(AutoReset(env)), 2)
     step = jax.jit(wenv.step)
     all_params = [scenarios.make(n).make_params(env) for n in scenarios.names()]
-    assert len(all_params) >= 13
+    assert len(all_params) >= 21  # full catalog incl. V2G/REAL/GRID packs
+    assert set(scenarios.GRID_PACK) <= set(scenarios.names())
 
     obs, state = wenv.reset(jax.random.key(0), all_params[0])
     action = wenv.sample_action(jax.random.key(1))
@@ -82,6 +83,28 @@ def test_fleet_adapter_conforms():
     ts = adapter.step(jax.random.key(1), state, adapter.sample_action(jax.random.key(2)))
     assert isinstance(ts, TimeStep)
     assert adapter.observation_space.contains(np.asarray(ts.obs))
+
+
+def test_coupled_fleet_one_jit_entry_over_catalog_with_grid_pack():
+    """Acceptance: the grid-coupled FleetEnv steps the WHOLE catalog — GRID_PACK
+    included — under one compiled step.  Per-station scenario params are
+    stacked (S, ...) slices; swapping which scenarios the fleet runs is a pure
+    array swap through the shared-feeder curtailment seam."""
+    from repro.obs import assert_one_compiled_step
+
+    fleet = FleetEnv(["paper_16", "deep_4x4"], couple_grid=True)
+    adapter = FleetAdapter(fleet)
+    all_names = scenarios.names()
+    assert set(scenarios.GRID_PACK) <= set(all_names)
+
+    def fleet_params(name):
+        sc = scenarios.make(name)
+        return scenarios.stack_params(
+            [sc.make_params(env) for env in fleet.envs]
+        )
+
+    params_list = [fleet_params(n) for n in all_names]
+    assert_one_compiled_step(adapter, params_list, num_envs=2)
 
 
 def test_stacking_helper_is_shared():
