@@ -79,15 +79,24 @@ def run(quick: bool = True):
     sizes = (1, 4) if quick else (1, 4, 16, 64)
     rows = []
     summary = []
+    base_per_station = None  # smallest fleet's per-station throughput
     for n in sizes:
         secs, fleet = bench_fleet(n)
         steps = fleet.config.episode_steps * fleet.n_stations
         sps = steps / secs
+        per_station = sps / fleet.n_stations
+        if base_per_station is None:
+            base_per_station = per_station
+        # per-station throughput relative to the smallest fleet: 1.0 is
+        # perfect linear scaling, < 1.0 makes the sub-linear falloff of
+        # bigger vmapped fleets visible at a glance in BENCH_fleet.json
+        eff = per_station / base_per_station
         rows.append(
             (
                 f"fleet_{fleet.n_stations}_stations",
                 secs * 1e6 / fleet.config.episode_steps,
-                f"{sps:.0f} station-steps/s ({fleet.max_evse}-lane padded)",
+                f"{sps:.0f} station-steps/s ({fleet.max_evse}-lane padded, "
+                f"eff={eff:.2f})",
             )
         )
         summary.append(
@@ -97,11 +106,13 @@ def run(quick: bool = True):
                 "padded_evse": fleet.max_evse,
                 "steps_per_sec": round(sps, 1),
                 "seconds_per_24h_rollout": round(secs, 4),
+                "scaling_efficiency": round(eff, 3),
             }
         )
     LAST_SUMMARY = {
         "num_envs": summary[-1]["n_stations"],
         "steps_per_sec": summary[-1]["steps_per_sec"],
+        "scaling_efficiency": summary[-1]["scaling_efficiency"],
         "fleet_throughput": summary,
     }
     emit_json_line("FLEET_JSON", {"fleet_throughput": summary})

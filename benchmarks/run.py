@@ -41,6 +41,10 @@ MODULES = {
         "benchmarks.grid",
         "Grid: feeder-envelope allocate cost + grid_aware vs max-charge violations",
     ),
+    "serve": (
+        "benchmarks.serve",
+        "Serve: batched-policy inference step, obs/sec + p50/p99 latency",
+    ),
     "roofline": ("benchmarks.roofline_report", "dry-run + roofline tables"),
 }
 
@@ -66,7 +70,17 @@ def main():
         help="append one JSONL record per benchmark (manifest + summary + "
         "rows) — the CI artifact sink",
     )
+    ap.add_argument(
+        "--list",
+        action="store_true",
+        help="print every registered benchmark (name: description) and exit",
+    )
     args = ap.parse_args()
+
+    if args.list:
+        for name, (_, desc) in MODULES.items():
+            print(f"{name}: {desc}")
+        return
 
     names = list(MODULES) if args.only is None else args.only.split(",")
     unknown = [n for n in names if n not in MODULES]

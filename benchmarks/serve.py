@@ -1,0 +1,105 @@
+"""Serving-shaped inference throughput: O(10^5) station observations per step.
+
+A production control plane for a national charging network doesn't run
+episodes — it runs *request batches*: every station ships its current
+observation, one device step maps the whole batch to actions.  This
+benchmark times exactly that path (:func:`repro.rl.eval.make_serve`: a
+jitted, donated-buffer batched-policy step) at increasing batch sizes and
+reports obs/sec plus p50/p99 per-batch latency.
+
+Persisted as ``BENCH_serve.json`` through the shared observability sink
+(schema_version, git sha, backend, device count) by ``benchmarks.run``.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ChargaxEnv, EnvConfig
+from repro.obs import emit_json_line
+from repro.rl import make_ppo_policy, networks
+from repro.rl.eval import make_serve
+
+# quick mode still proves the acceptance bar: >= 1e5 concurrent station
+# observations in one serve step (131072 = 2^17)
+BATCHES_QUICK = (32_768, 131_072)
+BATCHES_FULL = (32_768, 131_072, 524_288)
+
+LAST_SUMMARY: dict | None = None  # set by run(); persisted by benchmarks.run
+
+
+def _percentile(sorted_vals: list[float], q: float) -> float:
+    i = min(int(round(q * (len(sorted_vals) - 1))), len(sorted_vals) - 1)
+    return sorted_vals[i]
+
+
+def bench_serve(policy, params, batch: int, obs_dim: int, iters: int) -> dict:
+    """Latency stats for ``iters`` serve steps over a ``(batch, obs_dim)`` load."""
+    serve_step = make_serve(policy)
+    key = jax.random.key(0)
+    obs = jax.random.normal(jax.random.key(1), (batch, obs_dim), jnp.float32)
+    jax.block_until_ready(serve_step(params, key, obs))  # compile
+    lat = []
+    for i in range(iters):
+        # fresh buffer each step (the serving access pattern donation assumes)
+        o = obs + jnp.float32(i)
+        jax.block_until_ready(o)
+        t0 = time.perf_counter()
+        jax.block_until_ready(serve_step(params, key, o))
+        lat.append(time.perf_counter() - t0)
+    lat.sort()
+    p50 = _percentile(lat, 0.50)
+    return {
+        "batch_size": batch,
+        "obs_per_sec": round(batch / p50, 1),
+        "latency_p50_ms": round(p50 * 1e3, 3),
+        "latency_p99_ms": round(_percentile(lat, 0.99) * 1e3, 3),
+        "iters": iters,
+    }
+
+
+def run(quick: bool = True):
+    """Benchmark-harness entry point: list of (name, us_per_call, derived)."""
+    global LAST_SUMMARY
+    env = ChargaxEnv(EnvConfig())
+    n_heads = env.action_space.shape[-1]
+    n_actions = env.action_space.num_categories
+    params = networks.init_actor_critic(
+        jax.random.key(7), env.obs_dim, n_heads, n_actions
+    )
+    policy = make_ppo_policy(env, greedy=True)
+
+    batches = BATCHES_QUICK if quick else BATCHES_FULL
+    iters = 6 if quick else 20
+    rows, per_batch = [], []
+    for batch in batches:
+        stats = bench_serve(policy, params, batch, env.obs_dim, iters)
+        per_batch.append(stats)
+        rows.append(
+            (
+                f"serve_{batch}",
+                stats["latency_p50_ms"] * 1e3,  # us per serve step
+                f"{stats['obs_per_sec']:.0f} obs/s "
+                f"p99={stats['latency_p99_ms']:.1f}ms",
+            )
+        )
+    top = per_batch[-1]
+    LAST_SUMMARY = {
+        "obs_dim": env.obs_dim,
+        "policy": "ppo_mlp_greedy",
+        "donated": jax.default_backend() != "cpu",
+        "batch_size": top["batch_size"],
+        "obs_per_sec": top["obs_per_sec"],
+        "latency_p50_ms": top["latency_p50_ms"],
+        "latency_p99_ms": top["latency_p99_ms"],
+        "serve": per_batch,
+    }
+    emit_json_line("SERVE_JSON", {"serve": per_batch})
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run(quick=True):
+        print(",".join(str(x) for x in row))

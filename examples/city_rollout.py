@@ -1,0 +1,79 @@
+"""City-scale demand: one population arrival stream split across a fleet,
+plus the station-placement sweep and the serving-shaped inference path.
+
+Three rungs of the "millions of users" ladder in one script:
+
+1. couple a heterogeneous ``FleetEnv`` to a ``CityParams`` city — drivers
+   choose stations via the gravity/queue model, rejected demand shows up as
+   ``city/overflow``;
+2. score candidate station layouts with one vmapped sweep
+   (``city.sweep_layouts``);
+3. serve a large concurrent observation batch through the jitted
+   batched-policy step (``rl.serve``), the control-plane access pattern.
+
+    PYTHONPATH=src python examples/city_rollout.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.city import make_city, sweep_layouts
+from repro.core import ChargaxEnv, EnvConfig, FleetEnv
+from repro.rl import make_ppo_policy, networks, serve
+from repro.rl.baselines import max_charge_policy
+
+ARCHS = ["paper_16", "deep_4x4", "single_dc_8", "paper_16"]
+
+
+def main():
+    # --- 1. a city-coupled fleet --------------------------------------------
+    # the scenario's city_* axis sets population/layout/choice weights; the
+    # fleet splits the population stream across its stations every step
+    fleet = FleetEnv(ARCHS, EnvConfig(), city="city_ring_evening")
+    params = fleet.default_params
+    step = jax.jit(fleet.step)
+    _, state = fleet.reset(jax.random.key(0), params)
+    served0 = float(np.sum(np.asarray(state.cars_served)))
+    overflow = 0.0
+    for i in range(fleet.config.episode_steps):
+        a = fleet.sample_action(jax.random.key(1000 + i))
+        _, state, r, _, info = step(jax.random.key(i), state, a, params)
+        overflow += float(np.asarray(info["city/overflow"])[0])
+    print(f"city-coupled fleet ({fleet.n_stations} stations, "
+          f"pop {float(fleet.city.population):.0f}/day):")
+    print(f"  cars served over 24h : {np.sum(np.asarray(state.cars_served)) - served0:.0f}")
+    print(f"  balked (overflow)    : {overflow:.1f} expected drivers")
+    print(f"  fleet profit         : {np.sum(np.asarray(state.profit_cum)):.2f} EUR")
+
+    # --- 2. placement sweep: score layouts as one compiled vmap -------------
+    cities = [
+        make_city("city_ring_evening", n_stations=len(ARCHS), layout=kind)
+        for kind in ("ring", "grid", "clustered")
+    ]
+    out = sweep_layouts(fleet, cities, max_charge_policy(fleet.template))
+    for kind, p, o in zip(("ring", "grid", "clustered"),
+                          np.asarray(out["profit"]), np.asarray(out["overflow"])):
+        print(f"  layout {kind:>9}: profit {p:8.2f} EUR  overflow {o:7.1f}")
+    print(f"  best layout: {('ring', 'grid', 'clustered')[int(out['best'])]}")
+
+    # --- 3. serving-shaped inference ----------------------------------------
+    env = ChargaxEnv(EnvConfig())
+    policy = make_ppo_policy(env, greedy=True)
+    pparams = networks.init_actor_critic(
+        jax.random.key(7), env.obs_dim,
+        env.action_space.shape[-1], env.action_space.num_categories,
+    )
+    batch = 131_072  # O(1e5) concurrent station observations, one device step
+    obs = jax.random.normal(jax.random.key(1), (batch, env.obs_dim), jnp.float32)
+    jax.block_until_ready(serve(policy, pparams, obs))  # compile
+    t0 = time.perf_counter()
+    jax.block_until_ready(serve(policy, pparams, obs))
+    dt = time.perf_counter() - t0
+    print(f"serve: {batch:,} obs in {dt*1e3:.0f} ms "
+          f"({batch/dt:,.0f} obs/s; see BENCH_serve.json for the full table)")
+
+
+if __name__ == "__main__":
+    main()

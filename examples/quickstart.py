@@ -6,7 +6,8 @@ the paper's baseline.  Runs in ~1 minute on CPU.
 import jax
 import jax.numpy as jnp
 
-from repro.core import ChargaxEnv, EnvConfig, make_baseline_max_action
+from repro.core import ChargaxEnv, EnvConfig
+from repro.rl.baselines import make_baseline_max_action
 from repro.rl import PPOConfig, evaluate, make_ppo_policy, make_train
 from repro.rl.baselines import max_charge_policy
 

@@ -1,0 +1,72 @@
+"""Station-placement outer loop: score candidate city layouts as one vmap.
+
+The ROADMAP's placement direction (station placement via RL + agent-based
+simulation) falls out of the city demand-allocation layer: a layout is just a
+:class:`~repro.city.params.CityParams` pytree, so a *stack* of candidate
+layouts (leading axis ``K``, :func:`repro.utils.stack_pytrees`) rolls the
+same city-coupled fleet out under ``jax.vmap`` — one compiled program scores
+every candidate under the same trained (or baseline) policy.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import stack_pytrees
+
+
+def sweep_layouts(
+    fleet,
+    cities,
+    policy,
+    policy_params=None,
+    key: jax.Array | None = None,
+    steps: int | None = None,
+) -> dict:
+    """Roll each candidate city out against ``fleet`` and score it.
+
+    Args:
+        fleet: a city-coupled :class:`repro.core.FleetEnv` (its own ``city``
+            is ignored — each candidate is passed through the
+            ``step_with_city`` seam as a traced argument).
+        cities: stacked ``CityParams`` with a leading layout axis ``K``
+            (``stack_pytrees([make_city(...), ...])``), or a list/tuple of
+            ``CityParams`` which is stacked here.
+        policy: ``(params, key, obs) -> action`` — trained PPO policy or a
+            baseline.
+        steps: rollout length (default: one episode).
+
+    Returns a dict of ``(K,)`` arrays: ``profit`` (fleet-total EUR, the
+    placement score), ``cars_served``, ``overflow`` (expected balked
+    drivers), plus the winning index ``best``.
+    """
+    if isinstance(cities, (list, tuple)):
+        cities = stack_pytrees(cities)
+    key = key if key is not None else jax.random.key(0)
+    steps = steps if steps is not None else fleet.config.episode_steps
+    params = fleet.default_params
+
+    def rollout(city, key):
+        obs, state = fleet.reset(key, params)
+
+        def body(carry, _):
+            key, state, obs, overflow = carry
+            key, k_act, k_step = jax.random.split(key, 3)
+            action = policy(policy_params, k_act, obs)
+            obs, state, _, _, info = fleet.step_with_city(
+                k_step, state, action, params, city
+            )
+            return (key, state, obs, overflow + info["city/overflow"][0]), None
+
+        (_, state, _, overflow), _ = jax.lax.scan(
+            body, (key, state, obs, jnp.float32(0.0)), None, steps
+        )
+        return {
+            "profit": jnp.sum(state.profit_cum),
+            "cars_served": jnp.sum(state.cars_served),
+            "overflow": overflow,
+        }
+
+    out = jax.jit(jax.vmap(rollout, in_axes=(0, None)))(cities, key)
+    out["best"] = jnp.argmax(out["profit"])
+    return out

@@ -318,17 +318,26 @@ class ChargaxEnv(Environment):
         state: EnvState,
         alloc: AllocationResult,
         params: EnvParams | None = None,
+        arrival_rate_extra: jnp.ndarray | None = None,
     ) -> TimeStep:
         """Pipeline stages deliver -> depart_arrive -> settle -> advance_time
         -> observe, from an :class:`AllocationResult` (``state`` is the
-        pre-step state the allocation was computed against)."""
+        pre-step state the allocation was computed against).
+
+        ``arrival_rate_extra`` (scalar, cars/step) adds to the Poisson arrival
+        rate this step — the seam through which the city demand-allocation
+        layer (:mod:`repro.city`) turns arrival rates into a per-station input
+        computed from the population stream instead of a fixed table.
+        """
         params = params if params is not None else self.default_params
         cfg = self.config
         dt = cfg.dt_hours
         with annotate("env/charge_cars"):
             charged = transition.deliver(params, state, alloc.applied, dt)
         with annotate("env/depart_arrive"):
-            moved = transition.depart_arrive(params, charged.state, key)
+            moved = transition.depart_arrive(
+                params, charged.state, key, arrival_rate_extra
+            )
         with annotate("env/reward"):
             settled = transition.settle(params, state, alloc, charged, moved, dt)
         new_state = transition.advance_time(params, moved.state, settled.profit)
@@ -383,6 +392,14 @@ def make_baseline_max_action(env: ChargaxEnv):
     Policy code does not belong in the physics module; import from
     ``repro.rl.baselines`` (or use ``BASELINES['max_charge']``).
     """
+    import warnings
+
+    warnings.warn(
+        "repro.core.make_baseline_max_action is deprecated; import it from "
+        "repro.rl.baselines (or use rl.baselines.BASELINES['max_charge'])",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     from repro.rl.baselines import make_baseline_max_action as _impl
 
     return _impl(env)

@@ -70,6 +70,16 @@ class FleetEnv:
             the coupled step is bit-identical to the uncoupled vmap.
             Fleet-excess kW are attributed to stations pro-rata by draw on
             top of their local ``grid/violation``.
+        city: couple the fleet to a city-scale arrival stream — a
+            :class:`repro.city.CityParams` (or a scenario/name whose
+            ``city_*`` axis builds one): each step, the population stream at
+            the fleet clock is split across stations by the gravity/queue
+            choice model (:mod:`repro.city.demand`) and fed into the vmapped
+            finish as a per-station arrival-rate input on top of each
+            station's own table.  ``info`` gains ``city/arrival_rate`` (S,),
+            plus broadcast ``city/overflow``/``city/stream``.  A zero
+            population adds exactly zero rate, leaving the coupled fleet
+            bit-identical to the uncoupled one.
 
     ``reset``/``step`` mirror the single-station API with a leading station
     axis: obs ``(S, obs_dim)``, reward ``(S,)``, action ``(S, heads)``.
@@ -90,12 +100,27 @@ class FleetEnv:
         weights: RewardWeights | None = None,
         shard: bool = True,
         couple_grid: bool = False,
+        city: Any | None = None,
     ):
         if not architectures:
             raise ValueError("fleet needs at least one station")
         if scenarios is not None and len(scenarios) != len(architectures):
             raise ValueError("need one scenario entry per station")
         base = config or EnvConfig()
+        if city is not None:
+            from repro.city.params import CityParams, make_city
+
+            if not isinstance(city, CityParams):
+                # scenario name / Scenario: build its city axis for this fleet
+                city = make_city(
+                    city, n_stations=len(architectures), dt_minutes=base.dt_minutes
+                )
+            if city.n_stations != len(architectures):
+                raise ValueError(
+                    f"city has {city.n_stations} stations, fleet has "
+                    f"{len(architectures)}"
+                )
+        self.city = city
         self.architectures = tuple(architectures)
         self.scenarios = tuple(scenarios) if scenarios is not None else None
 
@@ -127,6 +152,14 @@ class FleetEnv:
         self._v_request = jax.vmap(self.template.request_stage, in_axes=(0, 0, 0))
         self._v_allocate = jax.vmap(transition.allocate, in_axes=(0, 0, 0))
         self._v_finish = jax.vmap(self.template.finish_step, in_axes=(0, 0, 0, 0))
+        # city coupling: finish_step with a per-station arrival-rate input —
+        # the fixed arrival table becomes one component of a dynamic rate
+        self._v_finish_rate = jax.vmap(
+            lambda k, s, a, p, r: self.template.finish_step(
+                k, s, a, p, arrival_rate_extra=r
+            ),
+            in_axes=(0, 0, 0, 0, 0),
+        )
 
     def _constrain(self, tree):
         """Pin the station axis to the ambient mesh's data axes (no-op when
@@ -213,11 +246,24 @@ class FleetEnv:
         action: jnp.ndarray,  # (S, heads) int32
         params: EnvParams | None = None,
     ) -> tuple[jnp.ndarray, EnvState, jnp.ndarray, jnp.ndarray, dict]:
+        return self.step_with_city(key, state, action, params, self.city)
+
+    def step_with_city(
+        self,
+        key: jax.Array,
+        state: EnvState,
+        action: jnp.ndarray,  # (S, heads) int32
+        params: EnvParams | None = None,
+        city=None,
+    ) -> tuple[jnp.ndarray, EnvState, jnp.ndarray, jnp.ndarray, dict]:
+        """``step`` with the city passed as a *traced argument* — the seam the
+        placement sweep (:func:`repro.city.sweep_layouts`) vmaps over to score
+        a stack of candidate ``CityParams`` under one compiled program."""
         params = params if params is not None else self.default_params
         keys = jax.random.split(key, self.n_stations)
-        if self.couple_grid:
-            obs, state, reward, done, info = self._coupled_step(
-                keys, state, action, params
+        if self.couple_grid or city is not None:
+            obs, state, reward, done, info = self._staged_step(
+                keys, state, action, params, city
             )
         else:
             obs, state, reward, done, info = self._v_step(keys, state, action, params)
@@ -232,30 +278,56 @@ class FleetEnv:
         )
         return obs, state, reward, done, info
 
-    def _coupled_step(self, keys, state, action, params):
-        """Grid-coupled step: shared feeder curtailment between the vmapped
-        request/allocate and deliver/settle halves of the staged pipeline."""
+    def _staged_step(self, keys, state, action, params, city=None):
+        """Fleet-coupled step through the staged-pipeline seams.
+
+        Grid coupling: shared feeder curtailment between the vmapped
+        request/allocate and deliver/settle halves.  City coupling: the
+        population arrival stream is allocated across stations
+        (:mod:`repro.city.demand`) from the pre-step state and fed into the
+        vmapped finish as a per-station arrival-rate input; a zero population
+        contributes exactly zero rate, so the coupled fleet stays
+        bit-identical to the uncoupled one (``tests/city/``)."""
         applied = self._v_request(state, action, params)
         alloc = self._v_allocate(params, state, applied)  # per-station caps
-        # fleet feeder cap: station 0's grid table at station 0's clock (all
-        # stations share the episode clock; days differ only across resets)
-        cap_table = params.grid_cap_kw_table[0]
-        fleet_cap = cap_table[
-            jnp.mod(state.day[0], cap_table.shape[0]),
-            jnp.mod(state.t[0], cap_table.shape[1]),
-        ]
-        p = alloc.power_kw  # (S,) post-local-allocation draws
-        total = jnp.sum(p)
-        scale = jnp.minimum(1.0, fleet_cap / jnp.maximum(total, 1e-9))
-        fleet_excess = jnp.maximum(total - fleet_cap, 0.0)
-        share = p / jnp.maximum(total, 1e-9)  # pro-rata attribution
-        alloc = transition.AllocationResult(
-            applied=jax.vmap(transition.curtail, in_axes=(0, None))(
-                alloc.applied, scale
-            ),
-            power_req_kw=alloc.power_req_kw,
-            power_kw=p * scale,
-            cap_kw=jnp.minimum(alloc.cap_kw, fleet_cap),
-            violation_kw=alloc.violation_kw + fleet_excess * share,
+        if self.couple_grid:
+            # fleet feeder cap: station 0's grid table at station 0's clock
+            # (all stations share the episode clock; days differ only across
+            # resets)
+            cap_table = params.grid_cap_kw_table[0]
+            fleet_cap = cap_table[
+                jnp.mod(state.day[0], cap_table.shape[0]),
+                jnp.mod(state.t[0], cap_table.shape[1]),
+            ]
+            p = alloc.power_kw  # (S,) post-local-allocation draws
+            total = jnp.sum(p)
+            scale = jnp.minimum(1.0, fleet_cap / jnp.maximum(total, 1e-9))
+            fleet_excess = jnp.maximum(total - fleet_cap, 0.0)
+            share = p / jnp.maximum(total, 1e-9)  # pro-rata attribution
+            alloc = transition.AllocationResult(
+                applied=jax.vmap(transition.curtail, in_axes=(0, None))(
+                    alloc.applied, scale
+                ),
+                power_req_kw=alloc.power_req_kw,
+                power_kw=p * scale,
+                cap_kw=jnp.minimum(alloc.cap_kw, fleet_cap),
+                violation_kw=alloc.violation_kw + fleet_excess * share,
+            )
+        if city is None:
+            return self._v_finish(keys, state, alloc, params)
+
+        from repro.city import demand
+
+        calloc, stream = demand.city_rates(city, params, state)
+        # the stream split respects the station-axis sharding: rates carry a
+        # leading (S,) axis, constrained onto the mesh's data axes like every
+        # other per-station tensor (no-op on a single device)
+        rates = self._constrain(calloc.rates)
+        obs, new_state, reward, done, info = self._v_finish_rate(
+            keys, state, alloc, params, rates
         )
-        return self._v_finish(keys, state, alloc, params)
+        info = dict(info)
+        info["city/arrival_rate"] = calloc.rates
+        info["city/overflow"] = jnp.broadcast_to(calloc.overflow, reward.shape)
+        info["city/stream"] = jnp.broadcast_to(stream, reward.shape)
+        return obs, new_state, reward, done, info

@@ -500,7 +500,12 @@ class ArriveResult(NamedTuple):
     n_rejected: jnp.ndarray  # ()
 
 
-def arrive_cars(params: EnvParams, state: EnvState, key: jax.Array) -> ArriveResult:
+def arrive_cars(
+    params: EnvParams,
+    state: EnvState,
+    key: jax.Array,
+    rate_extra: jnp.ndarray | None = None,
+) -> ArriveResult:
     n = state.occupied.shape[0]
     k_m, k_port = jax.random.split(key)
 
@@ -509,6 +514,11 @@ def arrive_cars(params: EnvParams, state: EnvState, key: jax.Array) -> ArriveRes
     rate = params.arrival_rate[jnp.mod(state.t, spd)] * params.arrival_day_scale[
         jnp.mod(state.day, n_days)
     ]
+    if rate_extra is not None:
+        # city coupling: the station's allocated share of the population-scale
+        # arrival stream (repro.city) adds to its own walk-in table; a zero
+        # share leaves the Poisson rate bit-identical to the uncoupled step
+        rate = rate + rate_extra
     m = jax.random.poisson(k_m, rate).astype(jnp.int32)
 
     # padded fleet lanes (evse_mask == 0) never accept cars
@@ -594,12 +604,20 @@ class DepartArriveResult(NamedTuple):
 
 
 def depart_arrive(
-    params: EnvParams, state: EnvState, key: jax.Array
+    params: EnvParams,
+    state: EnvState,
+    key: jax.Array,
+    rate_extra: jnp.ndarray | None = None,
 ) -> DepartArriveResult:
-    """Departures then arrivals, splitting the step key for the Poisson draw."""
+    """Departures then arrivals, splitting the step key for the Poisson draw.
+
+    ``rate_extra`` (optional, scalar cars/step) feeds extra expected arrivals
+    into the Poisson draw — the per-station input the city demand-allocation
+    layer computes each step instead of a fixed table.
+    """
     departed = depart_cars(state)
     key, k_arr = jax.random.split(key)
-    arrived = arrive_cars(params, departed.state, k_arr)
+    arrived = arrive_cars(params, departed.state, k_arr, rate_extra)
     return DepartArriveResult(
         arrived.state,
         departed.missing_kwh,

@@ -82,13 +82,16 @@ def run_dryrun(args) -> dict:
 
 def _expand_scenarios(spec: str) -> list[str]:
     """Expand ``--scenarios`` tokens: names pass through, pack names
-    (``REAL_PACK``, ``V2G_PACK``, ``V2G_MIXED_PACK``, ``CATALOG``) expand to
+    (``REAL_PACK``, ``GRID_PACK``, ``CITY_PACK``, ``V2G_PACK``, ``V2G_MIXED_PACK``,
+    ``CATALOG``) expand to
     their members — so ``--scenarios REAL_PACK,shopping_flat`` trains across
     the real-data worlds plus the synthetic baseline in one distribution."""
     from repro import scenarios as _scen
 
     packs = {
         "REAL_PACK": _scen.REAL_PACK,
+        "GRID_PACK": _scen.GRID_PACK,
+        "CITY_PACK": _scen.CITY_PACK,
         "V2G_PACK": _scen.V2G_PACK,
         "V2G_MIXED_PACK": _scen.V2G_MIXED_PACK,
         "CATALOG": tuple(s.name for s in _scen.CATALOG),
@@ -301,7 +304,8 @@ def main(argv=None):
         default=None,
         help="comma-separated catalog scenarios to train across "
         "(nested-vmap distribution training; num-envs must be a multiple); "
-        "pack names REAL_PACK / V2G_PACK / V2G_MIXED_PACK / CATALOG expand",
+        "pack names REAL_PACK / GRID_PACK / CITY_PACK / V2G_PACK / V2G_MIXED_PACK "
+        "/ CATALOG expand",
     )
     ap.add_argument("--scenario", default="shopping")
     ap.add_argument("--traffic", default="medium")

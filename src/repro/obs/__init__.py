@@ -46,6 +46,7 @@ from repro.obs.metrics import MetricsAccumulator
 from repro.obs.sinks import (
     SCHEMA_VERSION,
     MetricsWriter,
+    commits_behind,
     emit_json_line,
     read_jsonl,
     run_manifest,
@@ -69,6 +70,7 @@ __all__ = [
     "assert_one_compiled_step",
     "cache_entries",
     "check_trace_budget",
+    "commits_behind",
     "compile_guard",
     "emit_json_line",
     "enable_trace_annotations",

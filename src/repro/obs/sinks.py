@@ -21,11 +21,17 @@ import json
 import os
 import subprocess
 import time
+import warnings
 from typing import Any, IO
 
 import numpy as np
 
 SCHEMA_VERSION = 1
+
+# write_benchmark_json warns when it overwrites a BENCH file whose recorded
+# git_sha is more than this many commits behind HEAD — stale root benchmarks
+# (e.g. still carrying the seed sha) go loud instead of silently rotting
+STALE_BENCH_COMMITS = 5
 
 REPO_ROOT = os.path.abspath(
     os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "..", "..")
@@ -43,6 +49,23 @@ def git_sha(root: str | None = None) -> str:
         ).strip()
     except Exception:  # noqa: BLE001
         return "unknown"
+
+
+def commits_behind(sha: str | None, root: str | None = None) -> int | None:
+    """How many commits HEAD is ahead of ``sha`` (``None`` when unknowable:
+    no/invalid sha, shallow clone, outside a checkout)."""
+    if not sha or sha == "unknown":
+        return None
+    try:
+        out = subprocess.check_output(
+            ["git", "rev-list", "--count", f"{sha}..HEAD"],
+            cwd=root or REPO_ROOT,
+            text=True,
+            stderr=subprocess.DEVNULL,
+        )
+        return int(out.strip())
+    except Exception:  # noqa: BLE001
+        return None
 
 
 def run_manifest(**extra: Any) -> dict:
@@ -139,7 +162,27 @@ def write_benchmark_json(
     headline numbers (steps_per_sec, wrapper_overhead_frac, ...) stay
     greppable — plus the shared manifest fields and ``schema_version``.
     Provenance keys always win over summary keys.  Returns the path.
+
+    Overwriting a file whose recorded ``git_sha`` trails HEAD by more than
+    ``STALE_BENCH_COMMITS`` commits raises a ``UserWarning``: the committed
+    numbers were stale, so diff the refresh before trusting perf deltas.
     """
+    path = os.path.join(root or REPO_ROOT, f"BENCH_{name}.json")
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                old_sha = json.load(f).get("git_sha")
+        except Exception:  # noqa: BLE001 - corrupt old file: nothing to warn on
+            old_sha = None
+        behind = commits_behind(old_sha, root=root)
+        if behind is not None and behind > STALE_BENCH_COMMITS:
+            warnings.warn(
+                f"BENCH_{name}.json was {behind} commits stale "
+                f"(recorded git_sha {old_sha[:12]}); the numbers it held no "
+                "longer described this tree — compare the refresh carefully",
+                UserWarning,
+                stacklevel=2,
+            )
     rec = dict(summary or {})
     rec.update(
         run_manifest(benchmark=name, quick=quick),
@@ -148,7 +191,6 @@ def write_benchmark_json(
             for r, v, d in rows
         ],
     )
-    path = os.path.join(root or REPO_ROOT, f"BENCH_{name}.json")
     with open(path, "w") as f:
         json.dump(to_jsonable(rec), f, indent=1)
     return path

@@ -7,10 +7,12 @@ from repro.rl.baselines import (
     random_policy,
     v2g_arbitrage_policy,
 )
-from repro.rl.eval import evaluate
+from repro.rl.eval import evaluate, make_serve, serve
 from repro.rl import networks
 
 __all__ = [
+    "make_serve",
+    "serve",
     "PPOConfig",
     "make_train",
     "make_ppo_policy",

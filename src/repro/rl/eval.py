@@ -5,8 +5,15 @@ wrapper PPO trains through — so evaluation speaks the ``Environment``
 protocol and needs no hand-rolled vmap axes.  Results can be persisted to
 the shared JSONL sink (``writer=``, a :class:`repro.obs.MetricsWriter`) so
 eval KPIs land in the same schema as training metrics and benchmarks.
+
+Serving-shaped inference lives here too: :func:`serve` /
+:func:`make_serve` run one jitted, donated-buffer batched-policy step over
+an O(10^5)-observation batch — throughput measured the way a production
+control plane would run it (``benchmarks/serve.py`` -> ``BENCH_serve.json``).
 """
 from __future__ import annotations
+
+import weakref
 
 import jax
 import jax.numpy as jnp
@@ -89,3 +96,58 @@ def evaluate(
             kind="eval",
         )
     return result
+
+
+# ---------------------------------------------------------------------------
+# Serving-shaped inference: one batched policy step, production-plane style
+# ---------------------------------------------------------------------------
+def make_serve(policy, donate: bool | None = None):
+    """Compile ``policy`` into a serving step ``(params, key, obs_batch) -> action``.
+
+    The returned callable is jitted once and reused for every request batch of
+    the same shape — the shape a control plane serving thousands of stations
+    actually runs: observations stream in as one ``(B, obs_dim)`` batch, one
+    device step maps them to actions.
+
+    ``donate`` donates the observation buffer to the computation so XLA can
+    reuse its memory for the output (each serve step consumes its batch —
+    exactly the serving access pattern).  Default (``None``): donation on
+    accelerators, off on CPU where XLA ignores donation and warns.
+    """
+    if donate is None:
+        donate = jax.default_backend() != "cpu"
+
+    def serve_step(params, key, obs_batch):
+        with annotate("eval/serve"):
+            return policy(params, key, obs_batch)
+
+    return jax.jit(serve_step, donate_argnums=(2,) if donate else ())
+
+
+# one compiled serving step per policy callable (weak: dropping the policy
+# drops its executable)
+_SERVE_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def serve(policy, params, obs_batch, key: jax.Array | None = None):
+    """One serving step: batched actions for ``obs_batch`` under ``policy``.
+
+    Convenience wrapper over :func:`make_serve` that caches the compiled step
+    per policy callable, so repeated ``serve(policy, ...)`` calls hit one jit
+    entry.  ``obs_batch`` is ``(..., obs_dim)`` — any batch shape, typically
+    O(10^5) concurrent station observations.  For tight loops (benchmarks,
+    actual serving) hold the result of ``make_serve`` yourself.
+    """
+    try:
+        fn = _SERVE_CACHE.get(policy)
+    except TypeError:  # unhashable/unweakrefable policy object
+        fn = None
+    if fn is None:
+        fn = make_serve(policy)
+        try:
+            _SERVE_CACHE[policy] = fn
+        except TypeError:
+            pass
+    if key is None:
+        key = jax.random.key(0)
+    return fn(params, key, obs_batch)

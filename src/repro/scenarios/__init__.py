@@ -12,6 +12,7 @@ jitted ``env.step`` serves the whole catalog (and any user scenario).
 from repro.utils import stack_pytrees as stack_params
 from repro.scenarios.registry import (
     CATALOG,
+    CITY_PACK,
     GRID_PACK,
     REAL_PACK,
     V2G_MIXED_PACK,
@@ -25,6 +26,7 @@ from repro.scenarios import processes
 
 __all__ = [
     "CATALOG",
+    "CITY_PACK",
     "GRID_PACK",
     "MAX_CAR_MODELS",
     "REAL_PACK",

@@ -242,6 +242,50 @@ CATALOG = tuple(
             grid_cap_profile="evening_droop",
             grid_violation_weight=2.0,
         ),
+        # ----- city pack: population-scale demand routed across a fleet -----
+        # the city axis acts at FleetEnv level (FleetEnv(city="name") /
+        # repro.city.make_city); single-station lowering ignores it, so these
+        # keep the one-jit-entry catalog invariant for free.
+        Scenario(
+            name="city_ring_evening",
+            description="Ring of shopping-district stations serving an "
+            "evening-peaked city of 1800 charging sessions/day under ToU",
+            tariff="tou",
+            city_population=1800.0,
+            city_layout="ring",
+        ),
+        Scenario(
+            name="city_grid_commuters",
+            description="Commuter city on a grid of workplace stations: "
+            "2400 sessions/day, quiet weekends, queue-averse drivers",
+            profile="work",
+            weekend_factor=0.3,
+            city_population=2400.0,
+            city_layout="grid",
+            city_w_queue=4.0,
+        ),
+        Scenario(
+            name="city_clustered_core",
+            description="Dense urban core in winter: clustered stations, "
+            "3200 sessions/day, congestion spills demand outward",
+            profile="residential",
+            season="winter_peak",
+            city_population=3200.0,
+            city_layout="clustered",
+            city_radius_km=4.0,
+            city_w_dist=0.5,
+        ),
+        Scenario(
+            name="city_price_shoppers",
+            description="Price-sensitive drivers arbitraging ToU stations "
+            "across town: routing follows the tariff valley",
+            tariff="tou",
+            tou_peak_mult=1.8,
+            city_population=1500.0,
+            city_layout="ring",
+            city_w_price=10.0,
+            city_w_dist=0.15,
+        ),
     ]
 )
 
@@ -275,6 +319,17 @@ REAL_PACK = (
     "real_nl_2024_shopping_tou",
     "real_es_solar_heavy",
     "real_nl_2024_residential_drift",
+)
+
+# City-coupled scenarios: one population-scale arrival stream split across a
+# fleet by the gravity/queue choice model (repro.city).  The city axis never
+# touches EnvParams shapes — it lowers at fleet level via make_city — so the
+# pack rides the one-jit-entry invariant untouched (catalog 21 -> 25).
+CITY_PACK = (
+    "city_ring_evening",
+    "city_grid_commuters",
+    "city_clustered_core",
+    "city_price_shoppers",
 )
 
 # Grid-coupled scenarios: time-varying feeder power envelopes, demand-response

@@ -101,6 +101,22 @@ class Scenario:
     # grid_setpoint_kw, |drawn - setpoint| penalised at grid_setpoint_weight
     grid_setpoint_kw: float = 0.0
     grid_setpoint_weight: float = 0.0
+    # --- city axis: a population of drivers choosing among stations ---
+    # Acts at the FLEET level (``FleetEnv(city=...)`` via
+    # ``repro.city.make_city(scenario, n_stations)``): the fields below
+    # parameterise the population stream and the gravity/queue choice model.
+    # Single-station lowering ignores them entirely, so ``make_params`` emits
+    # the same EnvParams shapes as every other scenario and the one-jit-entry
+    # catalog invariant is untouched.
+    city_population: float = 0.0  # expected charging sessions/day city-wide
+    #     (0 = no city coupling; the stream scales linearly with it)
+    city_layout: str = "ring"  # ring | grid | clustered station placement
+    city_radius_km: float = 5.0
+    city_zones: int = 3  # gravity-model demand centroids
+    city_w_dist: float = 0.35  # choice logit weight per km of distance
+    city_w_price: float = 4.0  # per EUR/kWh of current buy price
+    city_w_queue: float = 2.0  # per unit of station occupancy fraction
+    city_seed: int = 11
 
     # ------------------------------------------------------------------
     # Serialisation (registry round-trips, config files)

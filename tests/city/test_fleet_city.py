@@ -1,0 +1,119 @@
+"""City-coupled FleetEnv: zero-pop inertness, arrival injection, sweep, no-recompile."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.city import make_city, sweep_layouts
+from repro.core import EnvConfig, FleetEnv
+from repro.rl.baselines import max_charge_policy
+
+jax.config.update("jax_platform_name", "cpu")
+
+ARCHS = ["paper_16", "deep_4x4", "single_dc_8"]
+
+
+def _rollout(fleet, n_steps=50):
+    """Jitted rollout; returns stacked obs + rewards for bit comparison."""
+    params = fleet.default_params
+    step = jax.jit(fleet.step)
+    _, state = fleet.reset(jax.random.key(0), params)
+    obs_t, rew_t = [], []
+    for i in range(n_steps):
+        a = fleet.sample_action(jax.random.key(1000 + i))
+        obs, state, r, _, info = step(jax.random.key(i), state, a, params)
+        obs_t.append(np.asarray(obs))
+        rew_t.append(np.asarray(r))
+    return np.stack(obs_t), np.stack(rew_t), state, info
+
+
+def test_zero_population_city_is_bit_identical_to_uncoupled():
+    """Acceptance: a city-coupled fleet at population=0 produces *bit-identical*
+    trajectories to the uncoupled fleet — coupling adds exactly 0.0 to every
+    station's Poisson rate, so the draws (same key) cannot move."""
+    city0 = make_city(n_stations=len(ARCHS), population=0.0)
+    ref_obs, ref_rew, ref_state, _ = _rollout(FleetEnv(ARCHS, EnvConfig()))
+    got_obs, got_rew, got_state, info = _rollout(
+        FleetEnv(ARCHS, EnvConfig(), city=city0)
+    )
+    assert np.array_equal(got_obs, ref_obs)
+    assert np.array_equal(got_rew, ref_rew)
+    assert np.array_equal(
+        np.asarray(got_state.cars_served), np.asarray(ref_state.cars_served)
+    )
+    # the coupling seam is live (info keys present), just inert
+    assert np.all(np.asarray(info["city/arrival_rate"]) == 0.0)
+
+
+def test_coupled_fleet_receives_city_arrivals():
+    """A real population injects demand: per-station rates conserve the
+    stream, and the fleet serves strictly more cars than the uncoupled run."""
+    city = make_city(
+        "city_ring_evening", n_stations=len(ARCHS), population=5000.0
+    )
+    _, _, ref_state, _ = _rollout(FleetEnv(ARCHS, EnvConfig()))
+    _, _, got_state, info = _rollout(FleetEnv(ARCHS, EnvConfig(), city=city))
+
+    rates = np.asarray(info["city/arrival_rate"])
+    assert rates.shape == (len(ARCHS),)
+    assert np.all(rates >= 0.0)
+    # conservation at the fleet seam: rates + overflow == stream (broadcast)
+    total = rates.sum() + float(np.asarray(info["city/overflow"])[0])
+    np.testing.assert_allclose(total, float(np.asarray(info["city/stream"])[0]), rtol=1e-4)
+    assert np.sum(np.asarray(got_state.cars_served)) > np.sum(
+        np.asarray(ref_state.cars_served)
+    )
+
+
+def test_fleet_builds_city_from_scenario_name():
+    fleet = FleetEnv(ARCHS, EnvConfig(), city="city_clustered_core")
+    assert fleet.city is not None
+    assert fleet.city.n_stations == len(ARCHS)
+    assert float(fleet.city.population) == 3200.0
+
+
+def test_fleet_rejects_station_count_mismatch():
+    with pytest.raises(ValueError):
+        FleetEnv(ARCHS, EnvConfig(), city=make_city(n_stations=5))
+
+
+def test_city_swap_is_a_pure_array_swap():
+    """Swapping which city a fleet serves must not recompile the step — the
+    same one-jit-entry contract the scenario catalog keeps."""
+    from repro.obs import cache_entries, compile_guard
+
+    fleet = FleetEnv(ARCHS, EnvConfig())
+    params = fleet.default_params
+    step = jax.jit(fleet.step_with_city)
+    _, state = fleet.reset(jax.random.key(0), params)
+    a = fleet.sample_action(jax.random.key(1))
+
+    cities = [
+        make_city(n, n_stations=len(ARCHS))
+        for n in ("city_ring_evening", "city_grid_commuters", "city_price_shoppers")
+    ]
+    step(jax.random.key(2), state, a, params, cities[0])  # the one compile
+    assert cache_entries(step) == 1
+    with compile_guard("city swap"):
+        for c in cities[1:]:
+            step(jax.random.key(2), state, a, params, c)
+    assert cache_entries(step) == 1
+
+
+def test_sweep_layouts_scores_candidates():
+    fleet = FleetEnv(ARCHS, EnvConfig(), city="city_ring_evening")
+    cities = [
+        make_city("city_ring_evening", n_stations=len(ARCHS), layout=kind)
+        for kind in ("ring", "clustered")
+    ]
+    # constant per-station policy from the padded single-station template;
+    # its (H,) action broadcasts over the fleet's (S, obs_dim) observations
+    out = sweep_layouts(
+        fleet, cities, max_charge_policy(fleet.template), steps=24,
+        key=jax.random.key(3),
+    )
+    assert out["profit"].shape == (2,)
+    assert out["cars_served"].shape == (2,)
+    assert out["overflow"].shape == (2,)
+    assert int(out["best"]) in (0, 1)
+    assert int(out["best"]) == int(np.argmax(np.asarray(out["profit"])))

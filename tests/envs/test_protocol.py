@@ -61,8 +61,9 @@ def test_catalog_one_jit_entry_through_wrapper_stack():
     wenv = VmapWrapper(LogWrapper(AutoReset(env)), 2)
     step = jax.jit(wenv.step)
     all_params = [scenarios.make(n).make_params(env) for n in scenarios.names()]
-    assert len(all_params) >= 21  # full catalog incl. V2G/REAL/GRID packs
+    assert len(all_params) >= 25  # full catalog incl. V2G/REAL/GRID/CITY packs
     assert set(scenarios.GRID_PACK) <= set(scenarios.names())
+    assert set(scenarios.CITY_PACK) <= set(scenarios.names())
 
     obs, state = wenv.reset(jax.random.key(0), all_params[0])
     action = wenv.sample_action(jax.random.key(1))

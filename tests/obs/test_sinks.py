@@ -74,6 +74,47 @@ def test_write_benchmark_json_schema(tmp_path):
     }
 
 
+def test_write_benchmark_json_warns_on_stale_overwrite(tmp_path, monkeypatch):
+    from repro.obs import sinks
+
+    rows = [("r", 1.0, "")]
+    # first write: no pre-existing file, never warns
+    with _no_warn():
+        write_benchmark_json("stale", rows, root=str(tmp_path))
+
+    # overwrite a file whose recorded sha trails HEAD by > STALE_BENCH_COMMITS
+    monkeypatch.setattr(sinks, "commits_behind", lambda sha, root=None: 12)
+    with pytest.warns(UserWarning, match="12 commits stale"):
+        write_benchmark_json("stale", rows, root=str(tmp_path))
+
+    # a fresh sha (0 behind) overwrites silently
+    monkeypatch.setattr(sinks, "commits_behind", lambda sha, root=None: 0)
+    with _no_warn():
+        write_benchmark_json("stale", rows, root=str(tmp_path))
+
+
+def _no_warn():
+    import warnings as _warnings
+    from contextlib import contextmanager
+
+    @contextmanager
+    def ctx():
+        with _warnings.catch_warnings():
+            _warnings.simplefilter("error", UserWarning)
+            yield
+
+    return ctx()
+
+
+def test_commits_behind_on_head_and_garbage():
+    from repro.obs.sinks import commits_behind, git_sha
+
+    assert commits_behind(git_sha()) == 0
+    assert commits_behind("unknown") is None
+    assert commits_behind(None) is None
+    assert commits_behind("not-a-sha") is None
+
+
 def test_emit_json_line_is_parseable(capsys):
     line = emit_json_line("TEST_JSON", {"v": jnp.float32(3.0), "n": [1, 2]})
     printed = capsys.readouterr().out.strip()

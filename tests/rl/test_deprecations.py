@@ -1,0 +1,25 @@
+"""The repro.core baseline alias must warn and forward to rl.baselines."""
+import jax
+import numpy as np
+import pytest
+
+from repro import core
+from repro.core import ChargaxEnv, EnvConfig
+from repro.rl import baselines
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_core_max_action_alias_warns_and_forwards():
+    env = ChargaxEnv(EnvConfig())
+    with pytest.warns(DeprecationWarning, match="repro.rl.baselines"):
+        legacy = core.make_baseline_max_action(env)
+    canonical = baselines.make_baseline_max_action(env)
+
+    obs, _ = env.reset(jax.random.key(0))
+    key = jax.random.key(1)
+    assert np.array_equal(
+        np.asarray(legacy(None, key, obs)), np.asarray(canonical(None, key, obs))
+    )
+    # and the canonical entry is what the registry serves
+    assert baselines.BASELINES["max_charge"] is baselines.max_charge_policy

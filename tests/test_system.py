@@ -6,7 +6,8 @@ import numpy as np
 
 def test_chargax_full_day_episode():
     """The paper's headline loop: a 24h episode of the 16-charger station."""
-    from repro.core import ChargaxEnv, EnvConfig, make_baseline_max_action
+    from repro.core import ChargaxEnv, EnvConfig
+    from repro.rl.baselines import make_baseline_max_action
 
     env = ChargaxEnv(EnvConfig(scenario="shopping", traffic="medium"))
     key = jax.random.key(0)
