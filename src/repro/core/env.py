@@ -57,6 +57,11 @@ class EnvConfig:
     # so heterogeneous stations share one array shape and one jit cache entry
     pad_evse: int = 0
     pad_nodes: int = 0
+    # hot path: route request/allocate/deliver through the fused step kernel
+    # (kernels/chargax_step) — Pallas on TPU/GPU, bit-exact jnp ref on CPU;
+    # see docs/kernels.md.  Off by default: flag-off params and HLO are
+    # identical to builds that predate the flag.
+    fused_step: bool = False
 
     @property
     def steps_per_day(self) -> int:
@@ -139,7 +144,7 @@ class ChargaxEnv(Environment):
 
         b = lay.battery
         benabled = float(b.enabled)
-        return EnvParams(
+        p = EnvParams(
             member=jnp.asarray(member),
             node_budget=jnp.asarray(lay.node_limit * lay.node_eff),
             evse_voltage=jnp.asarray(lay.evse_voltage),
@@ -191,6 +196,14 @@ class ChargaxEnv(Environment):
             grid_demand_amp=jnp.float32(20.0),
             weights=weights or RewardWeights(),
         )
+        if cfg.fused_step:
+            # hoist the kernel's lane-padded pole pack out of the per-step
+            # path: built once here, carried through scenario lowering (which
+            # only swaps tables/economics, never the electrical fields below)
+            from repro.kernels.chargax_step import ops as fused_ops
+
+            p = dataclasses.replace(p, pole=fused_ops.build_pole_params(p))
+        return p
 
     # ------------------------------------------------------------------
     # Spaces (the typed source of truth; the integer properties below are
@@ -284,12 +297,41 @@ class ChargaxEnv(Environment):
         The ``request_stage`` / ``allocate`` / ``finish_step`` seams are
         public so :class:`repro.core.fleet.FleetEnv` can interpose a shared
         feeder-cap curtailment between the vmapped halves.
+
+        With ``EnvConfig.fused_step`` on, the request/allocate/deliver
+        stages route through the fused kernel package instead
+        (:func:`repro.kernels.chargax_step.ops.fused_transition`); the
+        settle tail is shared.
         """
         params = params if params is not None else self.default_params
+        cfg = self.config
+        if cfg.fused_step:
+            from repro.kernels.chargax_step import ops as fused_ops
+
+            with annotate("env/decode"):
+                tgt_evse, tgt_batt = transition.decode(
+                    params,
+                    state,
+                    action,
+                    discretization=cfg.discretization,
+                    allow_v2g=cfg.allow_v2g,
+                    action_mode=cfg.action_mode,
+                )
+            with annotate("env/fused_transition"):
+                alloc, charged = fused_ops.fused_transition(
+                    params, state, tgt_evse, tgt_batt, cfg.dt_hours
+                )
+            return self.settle_tail(key, state, alloc, charged, params)
         applied = self.request_stage(state, action, params)
         with annotate("env/allocate"):
             alloc = transition.allocate(params, state, applied)
         return self.finish_step(key, state, alloc, params)
+
+    def with_fused_step(self, fused: bool) -> "ChargaxEnv":
+        """This env with the fused hot path on/off (self if already so)."""
+        if self.config.fused_step == bool(fused):
+            return self
+        return ChargaxEnv(dataclasses.replace(self.config, fused_step=bool(fused)))
 
     def request_stage(
         self,
@@ -330,10 +372,27 @@ class ChargaxEnv(Environment):
         computed from the population stream instead of a fixed table.
         """
         params = params if params is not None else self.default_params
+        with annotate("env/charge_cars"):
+            charged = transition.deliver(
+                params, state, alloc.applied, self.config.dt_hours
+            )
+        return self.settle_tail(key, state, alloc, charged, params, arrival_rate_extra)
+
+    def settle_tail(
+        self,
+        key: jax.Array,
+        state: EnvState,
+        alloc: AllocationResult,
+        charged: transition.ChargeResult,
+        params: EnvParams | None = None,
+        arrival_rate_extra: jnp.ndarray | None = None,
+    ) -> TimeStep:
+        """Pipeline tail shared by the staged and fused routes:
+        depart_arrive -> settle -> advance_time -> observe, from an already
+        delivered :class:`ChargeResult`."""
+        params = params if params is not None else self.default_params
         cfg = self.config
         dt = cfg.dt_hours
-        with annotate("env/charge_cars"):
-            charged = transition.deliver(params, state, alloc.applied, dt)
         with annotate("env/depart_arrive"):
             moved = transition.depart_arrive(
                 params, charged.state, key, arrival_rate_extra

@@ -161,6 +161,25 @@ class FleetEnv:
             in_axes=(0, 0, 0, 0, 0),
         )
 
+    def with_fused_step(self, fused: bool) -> "FleetEnv":
+        """This fleet with the fused hot path toggled on every station.
+
+        The uncoupled vmapped step routes through the fused kernel wholesale;
+        the grid-/city-coupled step keeps its staged seams (the shared-feeder
+        curtailment interposes between vmapped halves) — see docs/kernels.md.
+        """
+        if self.config.fused_step == bool(fused):
+            return self
+        return FleetEnv(
+            self.architectures,
+            dataclasses.replace(self.config, fused_step=bool(fused)),
+            self.scenarios,
+            self.weights,
+            self.shard,
+            self.couple_grid,
+            self.city,
+        )
+
     def _constrain(self, tree):
         """Pin the station axis to the ambient mesh's data axes (no-op when
         no mesh is active or ``shard=False``)."""

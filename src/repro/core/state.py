@@ -7,6 +7,8 @@ the paper's Eq. 4 factorisation.
 """
 from __future__ import annotations
 
+from typing import Any
+
 import jax.numpy as jnp
 
 from repro.utils import pytree_dataclass
@@ -87,6 +89,12 @@ class EnvParams:
     grid_demand_amp: jnp.ndarray | float  # amplitude of synthetic d_grid
     # --- reward ---
     weights: RewardWeights
+    # --- fused-step kernel pack (None unless EnvConfig.fused_step) ---
+    # A kernels.chargax_step PoleParams NamedTuple with lane-padded voltage/
+    # imax/eff/power rows and the (node, lane) membership matrix, hoisted out
+    # of the per-step path at make_params time.  Left None with the flag off
+    # so flag-off params stay structurally identical to pre-fused builds.
+    pole: Any = None
 
 
 @pytree_dataclass

@@ -389,21 +389,23 @@ class ChargeResult(NamedTuple):
     #     earlier V2G discharge (settled at p_v2g_comp, not billed at p_sell)
 
 
-def charge_cars(
-    params: EnvParams, state: EnvState, applied: AppliedActions, dt_hours: float
+def charge_bookkeeping(
+    state: EnvState,
+    applied: AppliedActions,
+    e_car: jnp.ndarray,
+    soc: jnp.ndarray,
+    e_remain: jnp.ndarray,
+    rhat: jnp.ndarray,
+    e_batt: jnp.ndarray,
+    batt_soc: jnp.ndarray,
 ) -> ChargeResult:
-    e_car, soc, e_remain, rhat = pole_integrate(
-        state.soc,
-        state.e_remain,
-        state.cap,
-        state.rbar,
-        state.tau,
-        state.occupied,
-        params.evse_voltage,
-        applied.evse_current,
-        1.0,
-        dt_hours,
-    )
+    """Deliver-stage state assembly from already-integrated pole physics.
+
+    Shared by :func:`charge_cars` (staged lax path) and the fused-kernel hot
+    path (``repro.kernels.chargax_step.ops``), which computes the pole
+    integration in one slab pass and hands the results here — so the deadline
+    tick, V2G debt settlement and energy counters exist exactly once.
+    """
     # deadlines tick only on occupied ports; padded/idle lanes hold at 0
     # instead of drifting negative without bound
     t_remain = jnp.where(state.occupied > 0.5, state.t_remain - 1, state.t_remain)
@@ -414,20 +416,6 @@ def charge_cars(
     # cycle earns nothing beyond a genuine buy/sell price spread
     e_repaid = jnp.minimum(jnp.maximum(e_car, 0.0), state.v2g_debt)
     v2g_debt = state.v2g_debt - e_repaid + jnp.maximum(-e_car, 0.0)
-
-    # battery pole: store eta*E charging, deliver E*eta grid-side discharging
-    e_b, batt_soc, _, _ = pole_integrate(
-        state.batt_soc,
-        jnp.float32(BIG),
-        params.batt_capacity,
-        params.batt_max_current,
-        params.batt_tau,
-        1.0,
-        params.batt_voltage,
-        applied.batt_current,
-        params.batt_eff,
-        dt_hours,
-    )
 
     new_state = replace(
         state,
@@ -443,7 +431,40 @@ def charge_cars(
         energy_discharged=state.energy_discharged
         + jnp.sum(jnp.maximum(-e_car, 0.0)),
     )
-    return ChargeResult(new_state, e_car, e_b, e_repaid)
+    return ChargeResult(new_state, e_car, e_batt, e_repaid)
+
+
+def charge_cars(
+    params: EnvParams, state: EnvState, applied: AppliedActions, dt_hours: float
+) -> ChargeResult:
+    e_car, soc, e_remain, rhat = pole_integrate(
+        state.soc,
+        state.e_remain,
+        state.cap,
+        state.rbar,
+        state.tau,
+        state.occupied,
+        params.evse_voltage,
+        applied.evse_current,
+        1.0,
+        dt_hours,
+    )
+    # battery pole: store eta*E charging, deliver E*eta grid-side discharging
+    e_b, batt_soc, _, _ = pole_integrate(
+        state.batt_soc,
+        jnp.float32(BIG),
+        params.batt_capacity,
+        params.batt_max_current,
+        params.batt_tau,
+        1.0,
+        params.batt_voltage,
+        applied.batt_current,
+        params.batt_eff,
+        dt_hours,
+    )
+    return charge_bookkeeping(
+        state, applied, e_car, soc, e_remain, rhat, e_b, batt_soc
+    )
 
 
 deliver = charge_cars

@@ -71,8 +71,17 @@ class Wrapper(Environment):
     def unwrapped(self) -> Environment:
         return self._env.unwrapped
 
-    def __repr__(self) -> str:
-        return f"{type(self).__name__}({self._env!r})"
+    def with_fused_step(self, fused: bool) -> "Wrapper":
+        """This stack with the inner env's fused hot path toggled.
+
+        Rebuilds the wrapper chain around ``inner.with_fused_step`` (wrappers
+        close over vmapped step functions at construction, so toggling after
+        the fact must reconstruct).  Returns self when nothing changes.
+        """
+        inner = self._env.with_fused_step(fused)
+        if inner is self._env:
+            return self
+        return type(self)(inner)
 
 
 def _where_done(done: jnp.ndarray, on_done: Any, otherwise: Any) -> Any:
@@ -145,6 +154,12 @@ class LogWrapper(Wrapper):
         super().__init__(env)
         self.metric_names = tuple(metrics)
 
+    def with_fused_step(self, fused: bool) -> "LogWrapper":
+        inner = self._env.with_fused_step(fused)
+        if inner is self._env:
+            return self
+        return type(self)(inner, self.metric_names)
+
     def _make_acc(self, batch: tuple[int, ...]) -> MetricsAccumulator | None:
         if not self.metric_names:
             return None
@@ -214,7 +229,10 @@ class VmapWrapper(Wrapper):
         num_envs: int,
         params_axis: int | None = None,
         num_scenarios: int | None = None,
+        fused_step: bool | None = None,
     ):
+        if fused_step is not None:
+            env = env.with_fused_step(fused_step)
         super().__init__(env)
         if num_envs < 1:
             raise ValueError(f"num_envs must be >= 1, got {num_envs}")
@@ -241,6 +259,12 @@ class VmapWrapper(Wrapper):
         else:
             self._v_reset = jax.vmap(env.reset, in_axes=(0, params_axis))
             self._v_step = jax.vmap(env.step, in_axes=(0, 0, 0, params_axis))
+
+    def with_fused_step(self, fused: bool) -> "VmapWrapper":
+        inner = self._env.with_fused_step(fused)
+        if inner is self._env:
+            return self
+        return type(self)(inner, self.num_envs, self.params_axis, self.num_scenarios)
 
     # -- (num_envs, ...) <-> (S, E, ...) views --------------------------
     def _nest(self, tree: Any) -> Any:
@@ -318,6 +342,11 @@ class FleetAdapter(Wrapper):
     of the wrapper stack (e.g. ``AutoReset(FleetAdapter(fleet))`` — the
     fleet's per-station ``done`` broadcasts through the auto-reset select).
     """
+
+    def __init__(self, env: Any, fused_step: bool | None = None):
+        if fused_step is not None:
+            env = env.with_fused_step(fused_step)
+        super().__init__(env)
 
     def step(
         self, key: jax.Array, state: Any, action: Any, params: Any | None = None

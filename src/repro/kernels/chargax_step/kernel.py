@@ -26,15 +26,18 @@ from repro.kernels.chargax_step.ref import BIG
 def _chargax_kernel(
     # dynamic state slabs, all (B_blk, P)
     target_ref, occupied_ref, soc_ref, e_remain_ref, cap_ref, rbar_ref, tau_ref,
+    grid_cap_ref,  # (B_blk, 128) feeder cap [kW], lane-replicated scalar
     # static params
     voltage_ref,  # (8, P) — row 0 real, sublane-padded
     imax_ref,  # (8, P)
     eff_ref,  # (8, P) storage efficiency (1 cars, eta_b battery)
+    power_w_ref,  # (8, P) grid-side watts per charging amp (0 on padding)
     member_t_ref,  # (P, Nn)  — transposed membership for the MXU
     node_budget_ref,  # (8, Nn)
     # outputs, (B_blk, P) unless noted
     current_out, soc_out, e_remain_out, rhat_out, e_pole_out,
     excess_out,  # (B_blk, 128) lane-replicated scalar
+    p_req_out,  # (B_blk, 128) lane-replicated scalar [kW]
     *,
     dt_hours: float,
     n_nodes: int,
@@ -83,6 +86,14 @@ def _chargax_kernel(
         scale = jnp.minimum(scale, jnp.where(row > 0, s_node[:, n : n + 1], BIG))
     i = i * scale
 
+    # --- feeder envelope (allocate stage, fused in) ---------------------------
+    # Only charging amps draw grid power; unlimited cap -> gscale == 1.0,
+    # a bitwise no-op, matching transition.allocate/curtail.
+    pw = power_w_ref[0, :]
+    p_req = jnp.sum(jnp.maximum(i, 0.0) * pw, axis=-1, keepdims=True) / 1000.0
+    gscale = jnp.minimum(1.0, grid_cap_ref[:, :1] / jnp.maximum(p_req, 1e-9))
+    i = jnp.where(i > 0.0, i * gscale, i)
+
     # --- charge epilogue ------------------------------------------------------
     e = v * i * dt_hours / 1000.0
     soc_delta = jnp.where(e >= 0, e * eff, e / jnp.maximum(eff, 1e-9))
@@ -97,34 +108,38 @@ def _chargax_kernel(
     rhat_out[...] = rhat_new
     e_pole_out[...] = e
     excess_out[...] = jnp.broadcast_to(excess, excess_out.shape)
+    p_req_out[...] = jnp.broadcast_to(p_req, p_req_out.shape)
 
 
 def chargax_fused_step(
     slabs_arrays: tuple[jnp.ndarray, ...],  # 7 x (B, P) in PoleSlabs order
-    params_arrays: tuple[jnp.ndarray, ...],  # voltage/imax/eff (8,P), member_t (P,Nn), budget (8,Nn)
+    params_arrays: tuple[jnp.ndarray, ...],  # voltage/imax/eff/power_w (8,P), member_t (P,Nn), budget (8,Nn)
+    grid_cap: jnp.ndarray,  # (B, 128) feeder cap [kW], lane-replicated
     *,
     dt_hours: float,
     block_envs: int = 256,
     interpret: bool = False,
 ):
     b, p = slabs_arrays[0].shape
-    member_t = params_arrays[3]
+    member_t = params_arrays[4]
     nn = member_t.shape[1]
     assert b % block_envs == 0, (b, block_envs)
 
     grid = (b // block_envs,)
     state_spec = pl.BlockSpec((block_envs, p), lambda e: (e, 0))
+    scalar_spec = pl.BlockSpec((block_envs, 128), lambda e: (e, 0))
     param_spec_row = pl.BlockSpec((8, p), lambda e: (0, 0))
     kernel = functools.partial(_chargax_kernel, dt_hours=dt_hours, n_nodes=nn)
     out_shapes = [jax.ShapeDtypeStruct((b, p), jnp.float32) for _ in range(5)]
-    out_shapes.append(jax.ShapeDtypeStruct((b, 128), jnp.float32))
-    out_specs = [state_spec] * 5 + [pl.BlockSpec((block_envs, 128), lambda e: (e, 0))]
+    out_shapes += [jax.ShapeDtypeStruct((b, 128), jnp.float32)] * 2
+    out_specs = [state_spec] * 5 + [scalar_spec] * 2
 
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[state_spec] * 7
-        + [param_spec_row] * 3
+        + [scalar_spec]
+        + [param_spec_row] * 4
         + [
             pl.BlockSpec((p, nn), lambda e: (0, 0)),
             pl.BlockSpec((8, nn), lambda e: (0, 0)),
@@ -132,4 +147,4 @@ def chargax_fused_step(
         out_specs=out_specs,
         out_shape=out_shapes,
         interpret=interpret,
-    )(*slabs_arrays, *params_arrays)
+    )(*slabs_arrays, grid_cap, *params_arrays)

@@ -59,6 +59,9 @@ class PoleParams(NamedTuple):
     eff: jnp.ndarray  # (P,) storage efficiency: 1 for cars, eta_b battery
     member: jnp.ndarray  # (Nn, P) 0/1
     node_budget: jnp.ndarray  # (Nn,)  BIG on padding rows
+    power_w: jnp.ndarray  # (P,) grid-side watts per charging amp:
+    #     evse_voltage/path_eff for EVSE lanes, batt_voltage for the battery
+    #     lane, 0 on padding — so p_req = sum(max(i,0) * power_w) / 1000 [kW]
 
 
 class FusedOut(NamedTuple):
@@ -68,9 +71,15 @@ class FusedOut(NamedTuple):
     rhat: jnp.ndarray
     e_pole: jnp.ndarray  # (..., P) kWh delivered (signed, pole-side)
     excess: jnp.ndarray  # (...,) max node violation pre-rescale [A]
+    p_req: jnp.ndarray  # (...,) requested grid power [kW] pre-curtail
 
 
-def fused_step_ref(slabs: PoleSlabs, pp: PoleParams, dt_hours: float) -> FusedOut:
+def fused_step_ref(
+    slabs: PoleSlabs,
+    pp: PoleParams,
+    dt_hours: float,
+    cap_kw: jnp.ndarray | None = None,
+) -> FusedOut:
     # --- per-pole clips: the core pipeline's shared physics -----------------
     up, down = pole_bounds(
         slabs.soc,
@@ -97,6 +106,14 @@ def fused_step_ref(slabs: PoleSlabs, pp: PoleParams, dt_hours: float) -> FusedOu
         )
     i = i * scale
 
+    # --- feeder envelope (core's allocate stage, folded in) -----------------
+    # Only *charging* amps draw grid power; an unlimited cap lowers to
+    # scale == 1.0, a bitwise no-op (matching transition.allocate/curtail).
+    p_req = jnp.sum(jnp.maximum(i, 0.0) * pp.power_w, axis=-1) / 1000.0
+    if cap_kw is not None:
+        gscale = jnp.minimum(1.0, cap_kw / jnp.maximum(p_req, 1e-9))
+        i = jnp.where(i > 0.0, i * gscale[..., None], i)
+
     # --- charge over dt (shared integrator) ---------------------------------
     e, soc, e_remain, rhat = pole_integrate(
         slabs.soc,
@@ -110,4 +127,4 @@ def fused_step_ref(slabs: PoleSlabs, pp: PoleParams, dt_hours: float) -> FusedOu
         pp.eff,
         dt_hours,
     )
-    return FusedOut(i, soc, e_remain, rhat, e, excess)
+    return FusedOut(i, soc, e_remain, rhat, e, excess, p_req)

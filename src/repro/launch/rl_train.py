@@ -40,7 +40,11 @@ def run_dryrun(args) -> dict:
     for multi_pod in (False, True):
         mesh = make_production_mesh(multi_pod=multi_pod)
         n_dev = mesh.devices.size
-        env = ChargaxEnv(EnvConfig(scenario=args.scenario, traffic=args.traffic))
+        env = ChargaxEnv(
+            EnvConfig(
+                scenario=args.scenario, traffic=args.traffic, fused_step=args.fused
+            )
+        )
         cfg = PPOConfig(
             num_envs=args.num_envs * n_dev,
             rollout_steps=args.rollout,
@@ -143,8 +147,17 @@ def run_train(args):
     from repro import obs
 
     env = ChargaxEnv(
-        EnvConfig(scenario=args.scenario, traffic=args.traffic, allow_v2g=args.v2g)
+        EnvConfig(
+            scenario=args.scenario,
+            traffic=args.traffic,
+            allow_v2g=args.v2g,
+            fused_step=args.fused,
+        )
     )
+    if args.fused:
+        from repro.kernels.chargax_step.ops import resolve_impl
+
+        print(f"[ppo] fused step kernel ON (impl={resolve_impl()})")
     # typed env surface (repro.envs): PPO wraps this in
     # LogWrapper(AutoReset(VmapWrapper)) with on-device KPI accumulation
     print(f"[ppo] obs={env.observation_space} actions={env.action_space}")
@@ -243,6 +256,8 @@ def run_train(args):
         )
     writer = None
     if args.metrics_out:
+        from repro.kernels.chargax_step.ops import resolve_impl
+
         writer = obs.MetricsWriter(
             args.metrics_out,
             run="rl_train",
@@ -251,6 +266,8 @@ def run_train(args):
             timesteps=args.timesteps,
             num_envs=cfg.num_envs,
             seed=args.seed,
+            fused_step=args.fused,
+            fused_impl=resolve_impl() if args.fused else None,
         )
         writer.write(
             {
@@ -314,6 +331,13 @@ def main(argv=None):
         action="store_true",
         help="allow car discharging (EnvConfig.allow_v2g); without --scenarios "
         "this trains across the bundled mixed v2g/non-v2g pack",
+    )
+    ap.add_argument(
+        "--fused",
+        action="store_true",
+        help="route the env step through the fused kernel hot path "
+        "(EnvConfig.fused_step; Pallas on TPU/GPU, bit-exact jnp ref on CPU; "
+        "override with CHARGAX_FUSED_IMPL=pallas|interpret|ref)",
     )
     ap.add_argument("--timesteps", type=int, default=300_000)
     ap.add_argument("--num-envs", type=int, default=12)

@@ -1,0 +1,66 @@
+"""Unit tests for the noise-robust wrapper-overhead estimator (ISSUE 10).
+
+Synthetic timing grids only — no rollouts, no jit.  The estimator exists
+because a naive best-of-N ratio on a shared machine reported a 2.41%
+"overhead" for a wrapper already PROVEN free by HLO identity; these tests
+pin down the properties that make the min-over-round-medians form immune to
+that failure.
+"""
+import numpy as np
+import pytest
+
+from benchmarks.speed_table import estimate_overhead
+
+
+def test_clean_grids_recover_true_overhead():
+    raw = [[1.00, 1.00, 1.00]] * 4
+    wrapped = [[1.01, 1.01, 1.01]] * 4
+    assert estimate_overhead(raw, wrapped) == pytest.approx(0.01, abs=1e-12)
+
+
+def test_zero_overhead_on_identical_grids():
+    rng = np.random.default_rng(0)
+    times = rng.uniform(1.0, 1.2, size=(8, 3))
+    assert estimate_overhead(times, times) == pytest.approx(0.0, abs=1e-12)
+
+
+def test_rep_spikes_are_discarded_by_round_medians():
+    # one GC/scheduler spike per round, alternating columns: a min-over-all-
+    # reps estimator would pair a clean raw rep with a clean wrapped rep from
+    # DIFFERENT rounds; the per-round median never sees the spike at all
+    raw = [[1.0, 1.0, 9.0], [1.0, 1.0, 1.0]]
+    wrapped = [[1.0, 1.0, 1.0], [1.0, 1.0, 9.0]]
+    assert estimate_overhead(raw, wrapped) == pytest.approx(0.0, abs=1e-12)
+
+
+def test_one_sided_load_drift_cannot_inflate_overhead():
+    # rounds 0-2 ran while the host was busy (both columns slow, equally —
+    # interleaving guarantees that); round 3 is quiet.  The min over rounds
+    # reads the quiet round's ratio, not the noisy ones'.
+    raw = [[2.0] * 3, [1.8] * 3, [1.5] * 3, [1.00] * 3]
+    wrapped = [[2.3] * 3, [2.0] * 3, [1.7] * 3, [1.005] * 3]
+    est = estimate_overhead(raw, wrapped)
+    assert est == pytest.approx(0.005, abs=1e-12)
+    assert est <= 0.02  # the <=2% target holds despite 15% noisy-round ratios
+
+
+def test_real_overhead_survives_noise():
+    # a genuine 5% overhead plus multiplicative noise: the estimate stays
+    # near 5% (it is an upper-bound-tightest estimator, within noise floor)
+    rng = np.random.default_rng(7)
+    base = rng.uniform(1.0, 1.05, size=(8, 3))
+    raw = base
+    wrapped = base * 1.05 * rng.uniform(1.0, 1.01, size=(8, 3))
+    est = estimate_overhead(raw, wrapped)
+    assert 0.03 <= est <= 0.07
+
+
+def test_single_rep_rounds_accepted_as_1d():
+    assert estimate_overhead([1.0, 1.0], [1.02, 1.03]) == pytest.approx(0.02)
+
+
+def test_mismatched_grids_rejected():
+    with pytest.raises(ValueError):
+        estimate_overhead([[1.0, 1.0]], [[1.0]])
+    with pytest.raises(ValueError):
+        estimate_overhead([], [])

@@ -76,6 +76,56 @@ def test_catalog_one_jit_entry_through_wrapper_stack():
     assert cache_entries(step) == 1  # pure array swaps, no recompile
 
 
+def test_catalog_one_jit_entry_fused_step():
+    """Acceptance (ISSUE 10): with ``fused_step=True`` the whole scenario
+    catalog still steps through the full wrapper stack under ONE compiled
+    step — the hoisted pole pack is a pure array leaf of params, so scenario
+    swaps never retrace the fused route."""
+    from repro.obs import cache_entries, compile_guard
+
+    env = ChargaxEnv(EnvConfig(fused_step=True))
+    wenv = VmapWrapper(LogWrapper(AutoReset(env)), 2)
+    step = jax.jit(wenv.step)
+    all_params = [scenarios.make(n).make_params(env) for n in scenarios.names()]
+    assert len(all_params) >= 25
+    for p in all_params:  # the hoisted pack survives scenario lowering
+        assert p.pole is not None
+
+    obs, state = wenv.reset(jax.random.key(0), all_params[0])
+    action = wenv.sample_action(jax.random.key(1))
+    ts = step(jax.random.key(2), state, action, all_params[0])  # the one compile
+    assert cache_entries(step) == 1
+    with compile_guard(f"{len(all_params)}-scenario fused catalog"):
+        for p in all_params[1:]:
+            ts = step(jax.random.key(2), state, action, p)
+            assert np.isfinite(float(np.asarray(ts.reward).sum()))
+    assert cache_entries(step) == 1
+
+
+def test_fused_flag_off_step_hlo_unchanged():
+    """Acceptance (ISSUE 10): ``fused_step=False`` envs lower to byte-identical
+    HLO — the flag (and the ``EnvParams.pole=None`` slot it leaves empty) is
+    invisible to the staged path, including after a with_fused_step round
+    trip."""
+    env_default = ChargaxEnv(EnvConfig())
+    env_off = env_default.with_fused_step(True).with_fused_step(False)
+    p_default = env_default.default_params
+    p_off = env_off.default_params
+    assert p_default.pole is None and p_off.pole is None
+    # pole=None is an empty pytree subtree: no extra leaves for jit to see
+    assert jax.tree_util.tree_structure(p_default) == jax.tree_util.tree_structure(p_off)
+
+    _, state = env_default.reset(jax.random.key(0))
+    action = env_default.sample_action(jax.random.key(1))
+
+    def hlo(env, params):
+        return jax.jit(env.step).lower(
+            jax.random.key(2), state, action, params
+        ).as_text()
+
+    assert hlo(env_default, p_default) == hlo(env_off, p_off)
+
+
 def test_fleet_adapter_conforms():
     fleet = FleetEnv(["paper_16", "deep_4x4"])
     adapter = FleetAdapter(fleet)

@@ -1,0 +1,45 @@
+"""Golden regression tests for the fused hot path (ISSUE 10 satellite).
+
+Tiny checked-in .npz digests of a deterministic fused rollout on three
+canonical scenarios.  A refactor that silently changes physics — a reordered
+clip, a dropped efficiency factor, a broken curtailment — moves these arrays
+and fails here loudly.  Intended changes: regenerate with
+``python tools/make_kernel_goldens.py`` and commit the diff.
+"""
+import os
+
+import numpy as np
+import pytest
+
+import harness
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "goldens")
+
+
+@pytest.mark.parametrize("name", sorted(harness.GOLDEN_SCENARIOS))
+def test_fused_rollout_matches_golden(name):
+    path = os.path.join(GOLDEN_DIR, f"{name}.npz")
+    assert os.path.exists(path), (
+        f"missing golden {path} — run tools/make_kernel_goldens.py"
+    )
+    want = np.load(path)
+    got = harness.compute_golden(name)
+    assert set(want.files) == set(got), "golden field set changed — regenerate"
+    for k in want.files:
+        np.testing.assert_allclose(
+            got[k],
+            want[k],
+            rtol=1e-5,
+            atol=1e-6,
+            err_msg=f"{name}/{k} drifted from golden (tools/make_kernel_goldens.py "
+            "regenerates after INTENDED physics changes)",
+        )
+
+
+@pytest.mark.parametrize("name", sorted(harness.GOLDEN_SCENARIOS))
+def test_golden_rollout_fused_equals_staged(name):
+    """The same golden recipe through the staged pipeline is bit-identical."""
+    fused = harness.compute_golden(name, fused=True)
+    staged = harness.compute_golden(name, fused=False)
+    for k, v in fused.items():
+        np.testing.assert_array_equal(v, staged[k], err_msg=f"{name}/{k}")

@@ -1,0 +1,42 @@
+#!/usr/bin/env python
+"""Regenerate the fused-step golden fixtures (tests/kernels/goldens/*.npz).
+
+Run after an INTENDED physics change, commit the updated .npz files, and say
+why in the commit message — the goldens exist so unintended physics drift
+fails loudly in `tests/kernels/test_goldens.py`:
+
+    PYTHONPATH=src python tools/make_kernel_goldens.py
+
+Each golden is a deterministic short rollout (fixed keys, max-charge action)
+of the fused hot path on one canonical scenario — see
+``tests/kernels/harness.compute_golden`` for the exact recipe.
+"""
+import os
+import sys
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+sys.path.insert(0, os.path.join(REPO, "tests", "kernels"))
+
+import numpy as np  # noqa: E402
+
+import harness  # noqa: E402
+
+
+def main() -> None:
+    out_dir = os.path.join(REPO, "tests", "kernels", "goldens")
+    os.makedirs(out_dir, exist_ok=True)
+    for name in harness.GOLDEN_SCENARIOS:
+        data = harness.compute_golden(name)
+        path = os.path.join(out_dir, f"{name}.npz")
+        np.savez_compressed(path, **data)
+        print(
+            f"{path}: {os.path.getsize(path)} bytes | "
+            + " ".join(f"{k}={v.shape}" for k, v in data.items())
+        )
+
+
+if __name__ == "__main__":
+    main()
